@@ -1,0 +1,25 @@
+"""Roofline digest for the benchmark CSV (full table in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+
+def rows():
+    from repro.launch.roofline import analyze
+    if not Path("experiments/dryrun").exists():
+        return [("roofline_summary", 0.0, "no dry-run data")]
+    rws = [r for r in analyze("experiments/dryrun") if r.get("status") == "ok"]
+    if not rws:
+        return [("roofline_summary", 0.0, "no ok cells")]
+    out = []
+    from collections import Counter
+    doms = Counter(r["bottleneck"] for r in rws)
+    fracs = sorted(r["roofline_fraction"] for r in rws)
+    out.append(("roofline_cells", float(len(rws)),
+                f"bottlenecks={dict(doms)} "
+                f"median_roofline_fraction={fracs[len(fracs) // 2]:.2f}"))
+    worst = min(rws, key=lambda r: r["roofline_fraction"])
+    out.append(("roofline_worst_cell", worst["roofline_fraction"],
+                f"{worst['arch']}/{worst['shape']} bottleneck="
+                f"{worst['bottleneck']}"))
+    return out

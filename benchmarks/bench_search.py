@@ -1,0 +1,36 @@
+"""RQ1 (paper §8): synthesis time for random redistribution problems.
+Paper claim: every problem synthesized in under a second (non-optimized
+Python).  We report mean / p95 / max wall time and the pass rate."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import plan_redistribution
+from .problems import MESH, sample_many
+
+
+def run(n=150, seed=42):
+    problems = sample_many(n, seed)
+    times = []
+    for t1, t2 in problems:
+        t0 = time.perf_counter()
+        plan_redistribution(t1, t2, MESH)
+        times.append(time.perf_counter() - t0)
+    times = np.array(times)
+    return {
+        "name": "rq1_search_time",
+        "n": n,
+        "mean_s": float(times.mean()),
+        "p95_s": float(np.percentile(times, 95)),
+        "max_s": float(times.max()),
+        "under_1s_frac": float((times < 1.0).mean()),
+    }
+
+
+def rows():
+    r = run()
+    return [("rq1_search_time_mean", r["mean_s"] * 1e6,
+             f"p95={r['p95_s'] * 1e6:.0f}us max={r['max_s'] * 1e6:.0f}us "
+             f"under1s={r['under_1s_frac']:.3f} n={r['n']}")]

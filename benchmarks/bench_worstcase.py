@@ -1,0 +1,41 @@
+"""Fig. 13 reproduction: the problems where the paper's objective loses to
+XLA's fewer-collectives plans, and the latency-aware objective's fix."""
+from __future__ import annotations
+
+import math
+
+from repro.core import plan_redistribution, plan_xla
+from .bench_vs_xla import HW, plan_time
+from .problems import MESH, sample_many
+
+
+def run(n=150, seed=42, k=4):
+    worst = []
+    for t1, t2 in sample_many(n, seed):
+        ours = plan_redistribution(t1, t2, MESH).plan
+        base = plan_xla(t1, t2, MESH)
+        to, tx = plan_time(ours), plan_time(base)
+        if to > tx:
+            lat = plan_redistribution(t1, t2, MESH, objective="time").plan
+            worst.append({
+                "src": str(t1), "dst": str(t2),
+                "mb": math.prod(t1.globaltype()) * 4 / 1e6,
+                "slowdown": to / tx,
+                "fixed_slowdown": plan_time(lat) / tx,
+            })
+    worst.sort(key=lambda r: -r["slowdown"])
+    return worst[:k]
+
+
+def rows():
+    worst = run()
+    if not worst:
+        return [("worstcase_slowdowns", 0.0,
+                 "no problems where XLA beats the paper objective "
+                 "under the time model")]
+    out = []
+    for i, w in enumerate(worst):
+        out.append((f"worstcase_P{i + 1}", w["slowdown"],
+                    f"{w['mb']:.0f}MB fixed_by_latency_aware="
+                    f"{w['fixed_slowdown']:.2f} src={w['src']}"))
+    return out

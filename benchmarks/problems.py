@@ -1,0 +1,54 @@
+"""Shared random redistribution-problem sampler (paper §8 methodology):
+global arrays 64–800 MB (fp32), 3 mesh axes, up to 6-D arrays; each axis
+replicated or partitioning one random dimension.
+"""
+from __future__ import annotations
+
+import math
+import random
+
+from repro.core import Mesh
+from repro.core.dist_types import DistDim, DistType
+
+MESH = Mesh.make({"a": 2, "b": 2, "c": 2})   # 8 devices, as evaluated
+
+
+def sample_problem(rng: random.Random, min_mb=64, max_mb=800):
+    rank = rng.randint(1, 6)
+    target_elems = rng.uniform(min_mb, max_mb) * 1e6 / 4
+    # dim sizes: multiples of 64 (divisible by any axis subset), random split
+    logs = sorted(rng.uniform(0, 1) for _ in range(rank - 1))
+    parts = [b - a for a, b in zip([0] + logs, logs + [1])]
+    sizes = []
+    for p in parts:
+        s = max(64, int(round(target_elems ** p / 64)) * 64)
+        sizes.append(s)
+    # adjust first dim to land near target
+    prod_rest = math.prod(sizes[1:]) if rank > 1 else 1
+    first = max(64, int(round(target_elems / prod_rest / 64)) * 64)
+    sizes[0] = first
+
+    def random_type():
+        placement = {}
+        for ax in MESH.names:
+            where = rng.randint(-1, rank - 1)
+            if where >= 0:
+                placement.setdefault(where, []).append(ax)
+        dims = []
+        for i, s in enumerate(sizes):
+            axes = tuple(placement.get(i, ()))
+            prod = math.prod(MESH.size(a) for a in axes)
+            dims.append(DistDim(s // prod, axes, s))
+        return DistType(tuple(dims))
+
+    return random_type(), random_type()
+
+
+def sample_many(n: int, seed: int = 42, **kw):
+    rng = random.Random(seed)
+    out = []
+    while len(out) < n:
+        t1, t2 = sample_problem(rng, **kw)
+        if t1 != t2:
+            out.append((t1, t2))
+    return out

@@ -1,0 +1,35 @@
+"""Benchmark harness — one section per paper table/figure.
+Prints ``name,value,derived`` CSV rows (value unit noted per row).
+
+  rq1_search_time        — §8 RQ1 (synthesis under a second)
+  rq2_geomean_speedup    — §8 RQ2 / Fig. 14 (vs XLA SPMD baseline)
+  rq3_latency_aware      — §8 RQ3 / Fig. 13 tail (beyond-paper objective)
+  memory_guarantee       — §4 Thm 4.8 (peak <= max(in, out); XLA violates)
+  worstcase_table        — Fig. 13 reproduction (biggest slowdowns)
+  elastic_reshard        — production feature benchmark
+  roofline_summary       — §Roofline digest (if dry-run data present)
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from . import bench_search, bench_vs_xla, bench_worstcase, bench_elastic
+
+    rows = []
+    rows += bench_search.rows()
+    rows += bench_vs_xla.rows()
+    rows += bench_worstcase.rows()
+    rows += bench_elastic.rows()
+    try:
+        from . import bench_roofline
+        rows += bench_roofline.rows()
+    except Exception as e:  # dry-run data may not exist yet
+        rows.append(("roofline_summary", 0.0, f"unavailable: {e}"))
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

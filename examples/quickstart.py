@@ -1,0 +1,53 @@
+"""Quickstart: synthesize, verify, and execute a memory-efficient
+redistribution (paper Example 3.1 — the factor-decomposition flagship).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=24")
+
+import numpy as np
+
+
+def main():
+    import jax
+    from repro.core import (Mesh, parse_type, plan_redistribution, plan_xla,
+                            verify_plan)
+    from repro.core.jax_exec import jax_mesh_of, make_executor, partition_spec
+    from jax.sharding import NamedSharding
+
+    mesh = Mesh.make({"x": 4, "y": 6})
+    t1 = parse_type("[3{x}12, 2{y}12]")
+    t2 = parse_type("[2{y}12, 3{x}12]")
+    print(f"redistribute {t1} ~> {t2} over mesh x:4, y:6 (24 devices)\n")
+
+    r = plan_redistribution(t1, t2, mesh)
+    print("synthesized plan :", r.plan.describe())
+    print("transfer cost    :", r.plan.cost(), "elements/device (Fig. 11)")
+    print("peak memory      :", r.plan.height(), "elements/device",
+          f"(bound = {max(t1.localsize(), t2.localsize())})")
+
+    base = plan_xla(t1, t2, mesh)
+    print("\nXLA-style plan   :", base.describe())
+    print("transfer cost    :", base.cost())
+    print("peak memory      :", base.height(),
+          "<- full replication (the paper's eq. (2) fallback)")
+
+    res = verify_plan(r.plan, t1, t2, mesh)
+    print("\ninterpreter check: OK,", res.transferred_elems,
+          "elements crossed the network")
+
+    # Execute on real (host) devices through shard_map collectives.
+    jmesh = jax_mesh_of(mesh)
+    g = np.arange(144, dtype=np.float32).reshape(12, 12)
+    fn, in_spec, out_spec = make_executor(r.plan, t1, t2, mesh, jmesh)
+    x = jax.device_put(g, NamedSharding(jmesh, in_spec))
+    y = jax.jit(fn, out_shardings=NamedSharding(jmesh, out_spec))(x)
+    assert np.array_equal(np.asarray(y), g)
+    shard0 = y.addressable_shards[0]
+    print(f"jax execution    : OK on {len(jax.devices())} devices; device 0 "
+          f"now holds a {shard0.data.shape} tile")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+import glob
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+for f in sorted(glob.glob("experiments/dryrun/*.singlepod.json")):
+    if ".L" in Path(f).name:
+        continue
+    r = json.load(open(f))
+    if r.get("status") != "ok":
+        continue
+    arch, shape = r["arch"], r["shape"]
+    p = r["pattern_len"]
+    for L in (p, 2 * p):
+        tag = f"{arch}.{shape}.singlepod.{r['policy']}.L{L}.U"
+        if Path(f"experiments/dryrun/{tag}.json").exists():
+            continue
+        cmd = ["timeout", "1800", sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--layers", str(L),
+               "--unroll",
+               "--policy", r["policy"], "--out", "experiments/dryrun"]
+        subprocess.run(cmd)

@@ -1,0 +1,115 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun + experiments/perf + a fresh benchmark run."""
+import json
+import subprocess
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.launch.roofline import analyze, to_markdown  # noqa: E402
+
+
+def dryrun_section():
+    cells = []
+    for f in sorted(Path("experiments/dryrun").glob("*.json")):
+        name = f.name
+        if ".L" in name or ".V_" in name:
+            continue
+        cells.append(json.loads(f.read_text()))
+    by_status = Counter(c["status"] for c in cells)
+    lines = ["## §Dry-run\n",
+             f"All {len(cells)} cells = 10 archs x 4 shapes x 2 meshes "
+             f"(16x16 single-pod = 256 chips; 2x16x16 multi-pod = 512 "
+             f"chips): **{by_status['ok']} compile OK, "
+             f"{by_status.get('skipped', 0)} documented skips "
+             f"(long_500k on quadratic-attention archs), "
+             f"{by_status.get('error', 0)} failures.**\n",
+             "Per-cell records (flops, bytes, per-collective bytes/counts, "
+             "memory analysis, compile time) live in `experiments/dryrun/"
+             "*.json`.  Summary (multi-pod mesh):\n",
+             "| arch | shape | status | compile(s) | HLO flops/dev | "
+             "collective bytes/dev | temp/dev |",
+             "|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c["mesh"] != "2x16x16":
+            continue
+        if c["status"] == "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | ok | {c['compile_s']} "
+                f"| {c['flops']:.3g} "
+                f"| {c['collective_bytes']['total_bytes']:.3g} "
+                f"| {c.get('temp_size_in_bytes', 0) / 1e9:.1f}GB |")
+        else:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['status']} "
+                         f"| — | — | — | — |")
+    return "\n".join(lines) + "\n"
+
+
+def roofline_section():
+    rows = analyze("experiments/dryrun")
+    md = to_markdown(rows)
+    doms = Counter(r["bottleneck"] for r in rows if r.get("status") == "ok")
+    notes = {
+        "memory": "HLO bytes-accessed is an unfused upper bound on HBM "
+                  "traffic; on TPU, fusion + the Pallas kernels move these "
+                  "cells toward their compute terms.",
+        "collective": "dominated by parameter all-gathers (FSDP) or "
+                      "KV-cache re-broadcasts; see §Perf for the fixes.",
+    }
+    out = ["## §Roofline (single-pod 16x16, per device)\n",
+           "Terms: compute = corrected HLO flops / 197 TF/s; memory = "
+           "corrected HLO bytes / 819 GB/s; collective = HLO collective "
+           "bytes / 50 GB/s.  'roofline' = (MODEL_FLOPS/peak) / limiting "
+           "term — the MFU bound of the configuration; 'useful' = "
+           "MODEL_FLOPS / HLO flops (remat/redundancy waste).\n",
+           "Loop correction: XLA cost analysis counts while-loop bodies "
+           "once, so totals are reconstructed from unrolled probe compiles "
+           "(see `launch/roofline.py`; probes in experiments/dryrun/*.U.json)."
+           "\n", md, "",
+           f"Bottleneck census: {dict(doms)}.",
+           f"- memory-bound cells: {notes['memory']}",
+           f"- collective-bound cells: {notes['collective']}"]
+    return "\n".join(out) + "\n"
+
+
+def perf_section():
+    log_path = Path("experiments/perf/log.json")
+    if not log_path.exists():
+        return "## §Perf\n(pending)\n"
+    log = [r for r in json.loads(log_path.read_text()) if "error" not in r]
+    lines = ["## §Perf — hillclimb measurements (see narrative below)\n",
+             "| cell | variant | compute(s) | memory(s) | collective(s) | "
+             "temp/dev |",
+             "|---|---|---|---|---|---|"]
+    for r in log:
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['variant']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.4f} | {r['temp_gb']:.1f}GB |")
+    return "\n".join(lines) + "\n"
+
+
+def bench_section():
+    out = subprocess.run([sys.executable, "-m", "benchmarks.run"],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    return ("## §Benchmarks (paper tables)\n\n```\n" + out.stdout.strip()
+            + "\n```\n")
+
+
+def main():
+    gen = "\n".join([dryrun_section(), roofline_section(), perf_section(),
+                     bench_section()])
+    path = Path("EXPERIMENTS.md")
+    text = path.read_text() if path.exists() else ""
+    marker = "<!-- GENERATED BELOW -->"
+    head = text.split(marker)[0] if marker in text else text
+    path.write_text(head + marker + "\n\n" + gen)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    main()

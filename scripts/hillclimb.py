@@ -1,0 +1,105 @@
+"""§Perf hillclimb driver: run (cell × variant) dry-runs + unrolled probes,
+compute corrected roofline terms, and append structured records to
+experiments/perf/log.json.
+
+Usage: PYTHONPATH=src python scripts/hillclimb.py CELL=VARIANT [...]
+  e.g. stablelm_12b:train_4k=attnchunk512 arctic_480b:train_4k=etp
+A variant of "" is the baseline (already present from the main sweep).
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+OUT = Path("experiments/dryrun")
+PERF = Path("experiments/perf")
+PERF.mkdir(parents=True, exist_ok=True)
+
+sys.path.insert(0, "src")
+from repro.configs.registry import get_config  # noqa: E402
+
+
+def run_one(arch, shape, variant, policy=None, unroll=False, layers=None):
+    tag = f"{arch}.{shape}.singlepod"
+    if policy:
+        tag += f".{policy}"
+    if layers is not None:
+        tag += f".L{layers}"
+    if unroll:
+        tag += ".U"
+    if variant:
+        tag += f".V_{variant}"
+    path = OUT / f"{tag}.json"
+    if not path.exists():
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", str(OUT)]
+        if policy:
+            cmd += ["--policy", policy]
+        if layers is not None:
+            cmd += ["--layers", str(layers)]
+        if unroll:
+            cmd += ["--unroll"]
+        if variant:
+            cmd += ["--variant", variant]
+        subprocess.run(["timeout", "2400"] + cmd, check=False)
+    if not path.exists():
+        raise RuntimeError(f"missing {path}")
+    return json.loads(path.read_text())
+
+
+def corrected(arch, shape, variant):
+    from repro.launch.roofline import (HW, corrected_metrics,
+                                       _slstm_extra_flops, model_flops)
+    from repro.configs.registry import SHAPES
+
+    cfg = get_config(arch)
+    p = len(cfg.pattern)
+    cell = run_one(arch, shape, variant)
+    if cell.get("status") != "ok":
+        raise RuntimeError(f"{arch}.{shape} V={variant}: {cell}")
+    pol = cell["policy"]
+    p1 = run_one(arch, shape, variant, policy=pol, unroll=True, layers=p)
+    p2 = run_one(arch, shape, variant, policy=pol, unroll=True, layers=2 * p)
+    mets = corrected_metrics(cell, p1, p2)
+    n_dev = cell["n_devices"]
+    sh = SHAPES[shape]
+    flops = mets["flops"]["corrected"] + _slstm_extra_flops(cfg, sh, n_dev)
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant or "baseline",
+        "policy": pol,
+        "t_compute_s": flops / HW["peak_flops"],
+        "t_memory_s": mets["bytes_accessed"]["corrected"] / HW["hbm_bw"],
+        "t_collective_s": mets["collective"]["corrected"] / HW["ici_bw"],
+        "temp_gb": cell.get("temp_size_in_bytes", 0) / 1e9,
+        "model_flops": model_flops(cfg, sh, n_dev),
+        "flops": flops,
+        "collective_counts": cell["collective_bytes"]["count"],
+        "compile_s": cell.get("compile_s"),
+    }
+    return rec
+
+
+def main():
+    log_path = PERF / "log.json"
+    log = json.loads(log_path.read_text()) if log_path.exists() else []
+    for spec in sys.argv[1:]:
+        cell, _, variant = spec.partition("=")
+        arch, _, shape = cell.partition(":")
+        key = (arch, shape, variant or "baseline")
+        if any((r["arch"], r["shape"], r["variant"]) == key for r in log):
+            print(f"[hillclimb] {key}: cached")
+            continue
+        print(f"[hillclimb] {key}: running...", flush=True)
+        try:
+            rec = corrected(arch, shape, variant)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "variant": variant or "baseline", "error": str(e)[:500]}
+        log.append(rec)
+        log_path.write_text(json.dumps(log, indent=2))
+        print(f"[hillclimb] {key}: {json.dumps(rec, default=str)[:300]}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""repro — memory-efficient array redistribution, as a JAX framework.
+
+Public surface:
+  repro.core    — the paper's contribution (types, search, lowering, exec)
+  repro.models  — the 10 assigned architectures
+  repro.train   — distributed trainer (DP/TP/FSDP/EP, ZeRO-1, fault tolerance)
+  repro.serve   — batched prefill/decode serving
+  repro.launch  — production mesh, dry-run, entry points
+"""
+
+from repro.core import (Mesh, parse_type, plan_redistribution,
+                        plan_xla_baseline)
+
+__version__ = "1.0.0"
+
+
+def redistribute(x, t1, t2, mesh, **kw):
+    """Redistribute a jax.Array from distributed type t1 to t2 (lazy import
+    so that planning-only users never touch jax device state)."""
+    from repro.core.jax_exec import redistribute_array
+    from repro.core.dist_types import Mesh as CMesh
+    if isinstance(mesh, dict):
+        mesh = CMesh.make(mesh)
+    if isinstance(t1, str):
+        t1 = parse_type(t1)
+    if isinstance(t2, str):
+        t2 = parse_type(t2)
+    return redistribute_array(x, t1, t2, mesh, **kw)

@@ -1,0 +1,73 @@
+"""Elastic re-scaling: reshard checkpointed state onto a different mesh.
+
+Every leaf whose sharding changes between the save mesh and the restore
+mesh is a redistribution problem  τ_saved ⤳ τ_new.  We synthesize the
+memory-bounded plan with the paper's search (repro.core) and report the
+aggregate transfer/memory savings vs the XLA-style fallback — on a 1000+
+node cluster this is the difference between "reshard in place" and
+"OOM while resharding the optimizer state".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import Mesh as CMesh
+from repro.core.api import plan_redistribution, plan_xla_baseline
+from repro.core.dist_types import DistDim, DistType
+from jax.sharding import PartitionSpec as P
+
+
+def dist_type_of(shape, spec: P, mesh: CMesh) -> DistType:
+    """PartitionSpec + global shape -> distributed type (paper syntax).
+    PartitionSpec lists axes major-to-minor; DistDim wants minor-to-major."""
+    dims = []
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for size, ent in zip(shape, entries):
+        if ent is None:
+            dims.append(DistDim(size, (), size))
+        else:
+            axes = (ent,) if isinstance(ent, str) else tuple(ent)
+            prod = math.prod(mesh.size(a) for a in axes)
+            dims.append(DistDim(size // prod, tuple(reversed(axes)), size))
+    return DistType(tuple(dims))
+
+
+@dataclasses.dataclass
+class ReshardReport:
+    n_leaves: int
+    n_replanned: int
+    ours_cost_elems: int        # Fig. 11 cost summed over leaves
+    xla_cost_elems: int
+    ours_peak_elems: int        # max per-device elements during reshard
+    xla_peak_elems: int
+
+
+def reshard_plan(leaf_shapes: dict, old_specs: dict, new_specs: dict,
+                 mesh: CMesh) -> tuple[dict, ReshardReport]:
+    """Plan the redistribution of every leaf; returns per-leaf plans and a
+    cost/memory report comparing against the XLA-style baseline."""
+    plans = {}
+    ours_cost = xla_cost = 0
+    ours_peak = xla_peak = 0
+    replanned = 0
+    for name, shape in leaf_shapes.items():
+        t1 = dist_type_of(shape, old_specs[name], mesh)
+        t2 = dist_type_of(shape, new_specs[name], mesh)
+        if t1 == t2:
+            continue
+        replanned += 1
+        r = plan_redistribution(t1, t2, mesh)
+        b = plan_xla_baseline(t1, t2, mesh)
+        plans[name] = r.plan
+        ours_cost += r.plan.cost()
+        xla_cost += b.cost()
+        ours_peak = max(ours_peak, r.plan.height())
+        xla_peak = max(xla_peak, b.height())
+    report = ReshardReport(
+        n_leaves=len(leaf_shapes), n_replanned=replanned,
+        ours_cost_elems=ours_cost, xla_cost_elems=xla_cost,
+        ours_peak_elems=ours_peak, xla_peak_elems=xla_peak)
+    return plans, report

@@ -1,0 +1,2 @@
+from .registry import (ALIASES, ARCH_IDS, SHAPES, ShapeSpec, all_cells,
+                       applicable, get_config)

@@ -1,0 +1,14 @@
+"""internvl2-2b [vlm] — InternLM2 backbone: 24L d=2048 16H (GQA kv=8)
+ff=8192 vocab=92553; InternViT frontend is a STUB (precomputed patch
+embeddings via input_specs) [arXiv:2404.16821]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab=92553,
+    pattern=(("attn", "swiglu"),),
+    frontend="vision", frontend_len=256,   # 256 patch-embedding positions
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+)

@@ -1,0 +1,14 @@
+"""minicpm3-4b [dense] — 62L d=2560 40H ff=6400 vocab=73448, MLA
+[hf:openbmb/MiniCPM3-4B]."""
+from repro.models.config import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab=73448,
+    pattern=(("mla", "swiglu"),),
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                  qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+    rope_theta=10_000.0,
+    dtype="bfloat16",
+)

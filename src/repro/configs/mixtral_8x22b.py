@@ -1,0 +1,15 @@
+"""mixtral-8x22b [moe] — 56L d=6144 48H (GQA kv=8) ff=16384 vocab=32768;
+8 experts top-2, sliding-window attention [arXiv:2401.04088]."""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=32768,
+    pattern=(("swa", "moe"),),
+    window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25,
+                  group_size=2048),
+    subquadratic=True,      # SWA: bounded KV -> long_500k runs
+    dtype="bfloat16",
+)

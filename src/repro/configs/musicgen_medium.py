@@ -1,0 +1,12 @@
+"""musicgen-medium [audio] — 48L d=1536 24H ff=6144 vocab=2048; decoder
+over EnCodec tokens (4 codebooks, delay-pattern stub) [arXiv:2306.05284]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+    d_ff=6144, vocab=2048,
+    pattern=(("attn", "gelu"),),
+    n_codebooks=4,
+    dtype="bfloat16",
+)

@@ -1,0 +1,13 @@
+"""olmo-1b [dense] — 16L d=2048 16H (GQA kv=16) ff=8192 vocab=50304.
+Non-parametric LayerNorm [arXiv:2402.00838]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=50304,
+    pattern=(("attn", "swiglu"),),
+    norm="layernorm_np",
+    rope_theta=10_000.0,
+    dtype="bfloat16",
+)

@@ -1,0 +1,16 @@
+"""recurrentgemma-2b [hybrid] — 26L d=2560 10H (MQA kv=1) ff=7680
+vocab=256000; RG-LRU + local attention, pattern (rec, rec, local) 1:2
+[arXiv:2402.19427]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256000,
+    pattern=(("rglru", "swiglu"), ("rglru", "swiglu"), ("local", "swiglu")),
+    window=2048, d_rnn=2560, conv_width=4,
+    tie_embeddings=True,
+    head_dim=256,
+    subquadratic=True,
+    dtype="bfloat16",
+)

@@ -1,0 +1,63 @@
+"""Architecture registry + the assigned input-shape sets.
+
+Every (arch × shape) cell is defined here; ``applicable()`` encodes the
+task-spec skips (long_500k requires sub-quadratic attention; all archs
+here are decoders so decode shapes always apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = [
+    "olmo_1b", "minicpm3_4b", "stablelm_12b", "qwen2_0_5b", "internvl2_2b",
+    "recurrentgemma_2b", "xlstm_1_3b", "musicgen_medium", "arctic_480b",
+    "mixtral_8x22b",
+]
+
+# canonical external names (task spec) -> module ids
+ALIASES = {
+    "olmo-1b": "olmo_1b", "minicpm3-4b": "minicpm3_4b",
+    "stablelm-12b": "stablelm_12b", "qwen2-0.5b": "qwen2_0_5b",
+    "internvl2-2b": "internvl2_2b", "recurrentgemma-2b": "recurrentgemma_2b",
+    "xlstm-1.3b": "xlstm_1_3b", "musicgen-medium": "musicgen_medium",
+    "arctic-480b": "arctic_480b", "mixtral-8x22b": "mixtral_8x22b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str):
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k only for sub-quadratic archs."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention architecture: 524288-token "
+                       "decode is quadratic-cost; skipped per task spec "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def all_cells():
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            yield a, s

@@ -1,0 +1,14 @@
+"""xlstm-1.3b [ssm] — 48L d=2048 4H, sLSTM + mLSTM blocks (7:1), d_ff=0
+(cells carry their own projections) [arXiv:2405.04517]."""
+from repro.models.config import ModelConfig
+
+_PATTERN = tuple([("mlstm", "none")] * 7 + [("slstm", "none")])
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304,
+    pattern=_PATTERN,
+    subquadratic=True,
+    dtype="bfloat16",
+)

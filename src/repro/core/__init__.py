@@ -1,0 +1,31 @@
+"""Core: memory-efficient array redistribution via portable collectives."""
+
+from .api import Redistribution, plan_redistribution, plan_xla_baseline
+from .collectives import AllGather, AllPermute, AllToAll, DynSlice, apply, apply_seq
+from .costmodel import HardwareModel, V5E, step_cost
+from .dist_types import (DistDim, DistType, Mesh, TypingError, decompose_type,
+                         dim, dtype_of, is_wf, check_wf, parse_type,
+                         prime_factors, valid_redistribution)
+from .interp import run_plan, shard, verify_plan
+from .lowering import lower
+from .normal_form import is_normal_form, normalize
+from .offsets import base_offset_map, equivalent, find_permutation
+from .plan import PAllToAll, PGather, PPermute, PSlice, PhysicalPlan
+from .search import SearchError, SearchResult, synthesize
+from .weak import WeakOp, mesh_prime_pool, plan_cost, plan_height
+from .xla_baseline import plan_xla
+
+__all__ = [
+    "Redistribution", "plan_redistribution", "plan_xla_baseline",
+    "AllGather", "AllPermute", "AllToAll", "DynSlice", "apply", "apply_seq",
+    "HardwareModel", "V5E", "step_cost",
+    "DistDim", "DistType", "Mesh", "TypingError", "decompose_type", "dim",
+    "dtype_of", "is_wf", "check_wf", "parse_type", "prime_factors",
+    "valid_redistribution",
+    "run_plan", "shard", "verify_plan", "lower",
+    "is_normal_form", "normalize",
+    "base_offset_map", "equivalent", "find_permutation",
+    "PAllToAll", "PGather", "PPermute", "PSlice", "PhysicalPlan",
+    "SearchError", "SearchResult", "synthesize",
+    "WeakOp", "mesh_prime_pool", "plan_cost", "plan_height", "plan_xla",
+]

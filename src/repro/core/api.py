@@ -1,0 +1,63 @@
+"""Top-level planning API.
+
+``plan_redistribution`` is the paper's full pipeline:
+  prime-decompose the mesh (Principle 1) -> weak shortest-path search
+  (§7.2) -> normal form (Thm 4.8) -> lowering with device maps and at most
+  one hoisted permute (§6, §7.3) -> PhysicalPlan.
+
+The physical plan addresses devices of the *original* mesh directly, so
+prime decomposition never leaks into execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .costmodel import HardwareModel
+from .dist_types import DistType, Mesh, decompose_type, parse_type
+from .lowering import lower
+from .plan import PhysicalPlan
+from .search import SearchResult, synthesize
+from .xla_baseline import plan_xla
+
+
+@dataclasses.dataclass
+class Redistribution:
+    plan: PhysicalPlan
+    search: SearchResult
+    t1: DistType
+    t2: DistType
+    mesh: Mesh
+
+
+def plan_redistribution(t1: DistType | str, t2: DistType | str,
+                        mesh: Mesh | dict, *,
+                        objective: str = "paper",
+                        hw: HardwareModel | None = None,
+                        memory_factor: float = 1.0) -> Redistribution:
+    if isinstance(mesh, dict):
+        mesh = Mesh.make(mesh)
+    if isinstance(t1, str):
+        t1 = parse_type(t1)
+    if isinstance(t2, str):
+        t2 = parse_type(t2)
+
+    dmesh, _ = mesh.decompose_primes()
+    d1 = decompose_type(t1, mesh)
+    d2 = decompose_type(t2, mesh)
+    res = synthesize(d1, d2, dmesh, objective=objective, hw=hw,
+                     memory_factor=memory_factor)
+    # Lower over the ORIGINAL mesh: weak ops only mention factors, and the
+    # base offset maps of τ and its decomposition are identical.
+    plan = lower(res.ops, t1, t2, mesh)
+    return Redistribution(plan=plan, search=res, t1=t1, t2=t2, mesh=mesh)
+
+
+def plan_xla_baseline(t1: DistType | str, t2: DistType | str,
+                      mesh: Mesh | dict) -> PhysicalPlan:
+    if isinstance(mesh, dict):
+        mesh = Mesh.make(mesh)
+    if isinstance(t1, str):
+        t1 = parse_type(t1)
+    if isinstance(t2, str):
+        t2 = parse_type(t2)
+    return plan_xla(t1, t2, mesh)

@@ -1,0 +1,153 @@
+"""Collective operations and their typing rules (paper Fig. 8, §7.1).
+
+Ops are *syntactic*; ``apply(op, τ, mesh)`` implements the typing rules
+T-AllGather / T-DynSlice / T-AllToAll / T-Permute, generalized to multiple
+axes (§7.1).  Axis lists are minor-to-major, matching distributed types.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+from .dist_types import DistDim, DistType, Mesh, TypingError, check_wf
+
+
+@dataclasses.dataclass(frozen=True)
+class AllGather:
+    """Remove the ``len(axes)`` minor-most axes of dimension ``dim``."""
+    dim: int
+    axes: tuple[str, ...] = ()   # if empty: remove the single minor-most axis
+
+    def __str__(self):
+        return f"allgather({self.dim}{',' + ','.join(self.axes) if self.axes else ''})"
+
+
+@dataclasses.dataclass(frozen=True)
+class DynSlice:
+    """Introduce ``axes`` as new minor-most axes of dimension ``dim``."""
+    dim: int
+    axes: tuple[str, ...]
+
+    def __str__(self):
+        return f"dynslice({self.dim},{','.join(self.axes)})"
+
+
+@dataclasses.dataclass(frozen=True)
+class AllToAll:
+    """Move the minor-most axes of dim ``src`` to minor-most of dim ``dst``."""
+    src: int
+    dst: int
+    axes: tuple[str, ...] = ()
+
+    def __str__(self):
+        ax = (',' + ','.join(self.axes)) if self.axes else ''
+        return f"alltoall({self.src},{self.dst}{ax})"
+
+
+@dataclasses.dataclass(frozen=True)
+class AllPermute:
+    """Reassign tiles to devices; target type must share local+global type."""
+    target: DistType
+
+    def __str__(self):
+        return f"allpermute(-> {self.target})"
+
+
+Collective = Union[AllGather, DynSlice, AllToAll, AllPermute]
+
+
+def _axes_product(axes: tuple[str, ...], mesh: Mesh) -> int:
+    return math.prod(mesh.size(a) for a in axes)
+
+
+def apply(op: Collective, t: DistType, mesh: Mesh) -> DistType:
+    """Apply a typing rule; raises TypingError when preconditions fail."""
+    check_wf(t, mesh)
+
+    if isinstance(op, AllGather):
+        d = _get_dim(t, op.dim)
+        axes = op.axes or d.axes[:1]
+        if not axes:
+            raise TypingError(f"allgather on unpartitioned dim {op.dim} of {t}")
+        if d.axes[:len(axes)] != tuple(axes):
+            raise TypingError(
+                f"allgather axes {axes} are not the minor-most axes of "
+                f"dim {op.dim} in {t}")
+        n = _axes_product(tuple(axes), mesh)
+        new = DistDim(d.tile * n, d.axes[len(axes):], d.global_)
+        out = _set_dim(t, op.dim, new)
+
+    elif isinstance(op, DynSlice):
+        d = _get_dim(t, op.dim)
+        if not op.axes:
+            raise TypingError("dynslice needs at least one axis")
+        n = _axes_product(op.axes, mesh)
+        if d.tile % n != 0:
+            raise TypingError(
+                f"dynslice: tile {d.tile} of dim {op.dim} not divisible by "
+                f"{n} in {t}")
+        used = set(t.axes())
+        for a in op.axes:
+            if a not in mesh:
+                raise TypingError(f"dynslice: unknown axis {a!r}")
+            if a in used:
+                raise TypingError(f"dynslice: axis {a!r} already used in {t}")
+        new = DistDim(d.tile // n, tuple(op.axes) + d.axes, d.global_)
+        out = _set_dim(t, op.dim, new)
+
+    elif isinstance(op, AllToAll):
+        if op.src == op.dst:
+            raise TypingError("alltoall requires distinct dimensions")
+        ds = _get_dim(t, op.src)
+        dd = _get_dim(t, op.dst)
+        axes = op.axes or ds.axes[:1]
+        if not axes:
+            raise TypingError(f"alltoall from unpartitioned dim {op.src} of {t}")
+        if ds.axes[:len(axes)] != tuple(axes):
+            raise TypingError(
+                f"alltoall axes {axes} are not the minor-most axes of dim "
+                f"{op.src} in {t}")
+        n = _axes_product(tuple(axes), mesh)
+        if dd.tile % n != 0:
+            raise TypingError(
+                f"alltoall: tile {dd.tile} of dim {op.dst} not divisible by "
+                f"{n} in {t}")
+        new_src = DistDim(ds.tile * n, ds.axes[len(axes):], ds.global_)
+        new_dst = DistDim(dd.tile // n, tuple(axes) + dd.axes, dd.global_)
+        out = _set_dim(_set_dim(t, op.src, new_src), op.dst, new_dst)
+
+    elif isinstance(op, AllPermute):
+        if op.target.localtype() != t.localtype():
+            raise TypingError(
+                f"allpermute: local types differ: {t} vs {op.target}")
+        if op.target.globaltype() != t.globaltype():
+            raise TypingError(
+                f"allpermute: global types differ: {t} vs {op.target}")
+        out = op.target
+
+    else:
+        raise TypingError(f"unknown collective {op!r}")
+
+    check_wf(out, mesh)
+    return out
+
+
+def apply_seq(ops, t: DistType, mesh: Mesh) -> list[DistType]:
+    """Type a whole sequence; returns [τ0, τ1, ..., τn]."""
+    types = [t]
+    for op in ops:
+        types.append(apply(op, types[-1], mesh))
+    return types
+
+
+def _get_dim(t: DistType, i: int) -> DistDim:
+    if not (0 <= i < t.rank):
+        raise TypingError(f"dimension {i} out of range for {t}")
+    return t.dims[i]
+
+
+def _set_dim(t: DistType, i: int, d: DistDim) -> DistType:
+    dims = list(t.dims)
+    dims[i] = d
+    return DistType(tuple(dims))

@@ -1,0 +1,81 @@
+"""Cost models.
+
+``paper_cost`` — Fig. 11: per-device data transfer counts (elements).
+  allpermute : localsize(in)     alltoall : localsize(in)
+  allgather  : localsize(out)    dynslice : 0
+
+``HardwareModel`` — beyond-paper (the paper's own "future work", §8/§9):
+adds per-collective latency and link bandwidth so that plan *time* can be
+estimated; with a hierarchical mesh, per-axis bandwidths model intra- vs
+inter-pod links.  The latency-aware search fixes the paper's Fig. 13
+slowdowns on small transfers; the hierarchy-aware cost prefers plans that
+keep traffic inside a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .dist_types import Mesh
+
+# ---------------------------------------------------------------------------
+# Paper cost model (Fig. 11), on weak plans
+# ---------------------------------------------------------------------------
+
+
+def step_cost(kind: str, localsize_in: int, localsize_out: int) -> int:
+    if kind == "dynslice":
+        return 0
+    if kind == "allgather":
+        return localsize_out
+    if kind in ("alltoall", "allpermute"):
+        return localsize_in
+    raise ValueError(f"unknown op kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Hardware time model (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Per-device time estimate for a collective step.
+
+    ``link_bw_bytes``: bytes/s of the slowest link crossed by the step.
+    ``latency_s``: per-collective launch/sync latency (global barrier).
+    ``elem_bytes``: bytes per array element.
+    TPU v5e defaults: ~50 GB/s/link ICI, a few microseconds dispatch.
+    """
+
+    link_bw_bytes: float = 50e9
+    latency_s: float = 8e-6
+    elem_bytes: int = 4
+    # Optional per-mesh-axis bandwidth override (e.g. {"pod": 5e9}) for
+    # hierarchical topologies: a step touching a slow axis pays its bw.
+    axis_bw: dict | None = None
+
+    def bw_for_axes(self, axes: Sequence[str] | None) -> float:
+        if not self.axis_bw or not axes:
+            return self.link_bw_bytes
+        return min(self.axis_bw.get(a, self.link_bw_bytes) for a in axes)
+
+    def step_time(self, kind: str, localsize_in: int, localsize_out: int,
+                  axes: Sequence[str] | None = None) -> float:
+        elems = step_cost(kind, localsize_in, localsize_out)
+        if kind == "dynslice":
+            return 0.0  # purely local
+        return self.latency_s + elems * self.elem_bytes / self.bw_for_axes(axes)
+
+    def plan_time(self, steps) -> float:
+        """steps: iterable of (kind, localsize_in, localsize_out, axes)."""
+        return sum(self.step_time(*s) for s in steps)
+
+
+V5E = HardwareModel(link_bw_bytes=50e9, latency_s=8e-6, elem_bytes=4)
+
+# Hardware constants used throughout the roofline analysis (task spec).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,290 @@
+"""Distributed array types (paper Fig. 6).
+
+A distributed dimension ``c{x1,...,xn}s`` describes a global dimension of
+size ``s`` partitioned over mesh axes ``x1..xn`` (listed minor-to-major,
+i.e. the *first* axis has the smallest stride) leaving a per-device tile of
+size ``c``.  A distributed type is a list of distributed dimensions.
+
+Well-formedness (Fig. 7b):
+  * ``c * prod(size(xi)) == s`` for every dimension,
+  * every mesh axis appears at most once in the whole type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import math
+import re
+from typing import Iterable, Mapping, Sequence
+
+
+class TypingError(Exception):
+    """Raised when a distributed type or collective is ill-formed."""
+
+
+# ---------------------------------------------------------------------------
+# Mesh
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mesh:
+    """A logical device mesh: ordered named axes with sizes.
+
+    The device order is the row-major ravel of the axes in declaration
+    order (first axis outermost), matching ``jax.sharding.Mesh``.
+    """
+
+    axes: tuple[tuple[str, int], ...]
+
+    def __post_init__(self):
+        names = [a for a, _ in self.axes]
+        if len(set(names)) != len(names):
+            raise TypingError(f"duplicate mesh axis names: {names}")
+        for a, k in self.axes:
+            if k < 1:
+                raise TypingError(f"mesh axis {a} has non-positive size {k}")
+
+    @staticmethod
+    def make(spec: Mapping[str, int] | Iterable[tuple[str, int]]) -> "Mesh":
+        if isinstance(spec, Mapping):
+            return Mesh(tuple(spec.items()))
+        return Mesh(tuple(spec))
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(a for a, _ in self.axes)
+
+    def size(self, name: str) -> int:
+        for a, k in self.axes:
+            if a == name:
+                return k
+        raise TypingError(f"unknown mesh axis {name!r}")
+
+    def __contains__(self, name: str) -> bool:
+        return any(a == name for a, _ in self.axes)
+
+    @property
+    def nelems(self) -> int:
+        return math.prod(k for _, k in self.axes)
+
+    def coords(self) -> Iterable[tuple[int, ...]]:
+        """All device coordinates in device-id (row-major) order."""
+        return itertools.product(*(range(k) for _, k in self.axes))
+
+    def coord_of(self, device_id: int) -> tuple[int, ...]:
+        out = []
+        for _, k in reversed(self.axes):
+            out.append(device_id % k)
+            device_id //= k
+        return tuple(reversed(out))
+
+    def id_of(self, coord: Sequence[int]) -> int:
+        dev = 0
+        for (_, k), c in zip(self.axes, coord):
+            dev = dev * k + c
+        return dev
+
+    def decompose_primes(self) -> tuple["Mesh", dict[str, tuple[str, ...]]]:
+        """Principle 1: factor every axis into prime-size sub-axes.
+
+        Returns the decomposed mesh (same device order: sub-axes of an axis
+        are laid out contiguously, minor sub-axis fastest) and a map from
+        original axis name to its sub-axis names (minor-to-major).
+
+        An axis ``x: 12`` becomes sub-axes ``x@0:2, x@1:2, x@2:3`` where the
+        *last listed* sub-axis in the mesh ordering is the fastest-varying.
+        We name sub-axes so that ``x@0`` is the *minor-most* (stride-1 within
+        x's coordinate).
+        """
+        new_axes: list[tuple[str, int]] = []
+        submap: dict[str, tuple[str, ...]] = {}
+        for name, k in self.axes:
+            fs = prime_factors(k)
+            if len(fs) <= 1:
+                new_axes.append((name, k))
+                submap[name] = (name,)
+            else:
+                subs = tuple(f"{name}@{i}" for i in range(len(fs)))
+                # Device order: original axis coordinate c maps to sub-coords
+                # with x@0 minor (fastest).  Row-major ravel lists the last
+                # axis fastest, so append major-to-minor: x@last .. x@0.
+                for i in reversed(range(len(fs))):
+                    new_axes.append((subs[i], fs[i]))
+                submap[name] = subs
+        # ``new_axes`` currently groups each original axis contiguously with
+        # the major sub-axis first, preserving the global device order.
+        return Mesh(tuple(new_axes)), submap
+
+
+@functools.lru_cache(maxsize=None)
+def prime_factors(n: int) -> tuple[int, ...]:
+    """Prime factorization, ascending, with multiplicity."""
+    if n < 1:
+        raise ValueError(f"cannot factor {n}")
+    out: list[int] = []
+    d = 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Distributed dimensions and types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistDim:
+    """A distributed dimension ``tile{axes}global``; axes minor-to-major."""
+
+    tile: int
+    axes: tuple[str, ...]
+    global_: int
+
+    def __str__(self) -> str:
+        if not self.axes:
+            return f"{self.global_}" if self.tile == self.global_ else (
+                f"{self.tile}{{}}{self.global_}")
+        return f"{self.tile}{{{','.join(self.axes)}}}{self.global_}"
+
+
+@dataclasses.dataclass(frozen=True)
+class DistType:
+    dims: tuple[DistDim, ...]
+
+    def __str__(self) -> str:
+        return "[" + ", ".join(str(d) for d in self.dims) + "]"
+
+    @property
+    def rank(self) -> int:
+        return len(self.dims)
+
+    def axes(self) -> tuple[str, ...]:
+        return tuple(a for d in self.dims for a in d.axes)
+
+    def localtype(self) -> tuple[int, ...]:
+        return tuple(d.tile for d in self.dims)
+
+    def globaltype(self) -> tuple[int, ...]:
+        return tuple(d.global_ for d in self.dims)
+
+    def localsize(self) -> int:
+        return math.prod(self.localtype())
+
+    def globalsize(self) -> int:
+        return math.prod(self.globaltype())
+
+
+def dim(tile: int, axes: Sequence[str] = (), global_: int | None = None) -> DistDim:
+    if global_ is None:
+        global_ = tile
+    return DistDim(tile, tuple(axes), global_)
+
+
+def dtype_of(dims: Sequence[DistDim]) -> DistType:
+    return DistType(tuple(dims))
+
+
+# ---------------------------------------------------------------------------
+# Well-formedness (Fig. 7b)
+# ---------------------------------------------------------------------------
+
+
+def check_wf(t: DistType, mesh: Mesh) -> None:
+    """WF-Type: axes valid + used affinely; sizes multiply out."""
+    seen: set[str] = set()
+    for i, d in enumerate(t.dims):
+        prod = d.tile
+        for a in d.axes:
+            if a not in mesh:
+                raise TypingError(f"dim {i}: unknown axis {a!r} in {t}")
+            if a in seen:
+                raise TypingError(f"axis {a!r} used more than once in {t}")
+            seen.add(a)
+            prod *= mesh.size(a)
+        if prod != d.global_:
+            raise TypingError(
+                f"dim {i}: tile {d.tile} * axes {d.axes} != global "
+                f"{d.global_} in {t}")
+        if d.tile < 1 or d.global_ < 1:
+            raise TypingError(f"dim {i}: non-positive sizes in {t}")
+
+
+def is_wf(t: DistType, mesh: Mesh) -> bool:
+    try:
+        check_wf(t, mesh)
+        return True
+    except TypingError:
+        return False
+
+
+def valid_redistribution(t1: DistType, t2: DistType, mesh: Mesh) -> bool:
+    """§2.5: a redistribution τ1 ⤳ τ2 is valid iff globaltypes agree."""
+    return (is_wf(t1, mesh) and is_wf(t2, mesh)
+            and t1.globaltype() == t2.globaltype())
+
+
+# ---------------------------------------------------------------------------
+# Parsing:  "[8{x,y}256, 1024]"  (tests & docs convenience)
+# ---------------------------------------------------------------------------
+
+_DIM_RE = re.compile(
+    r"^\s*(?:(\d+)\s*\{([^}]*)\}\s*(\d+)|(\d+))\s*$")
+
+
+def parse_type(s: str) -> DistType:
+    s = s.strip()
+    if not (s.startswith("[") and s.endswith("]")):
+        raise TypingError(f"bad type syntax: {s!r}")
+    body = s[1:-1].strip()
+    dims: list[DistDim] = []
+    if body:
+        # split on commas not inside braces
+        parts, depth, cur = [], 0, []
+        for ch in body:
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        parts.append("".join(cur))
+        for p in parts:
+            m = _DIM_RE.match(p)
+            if not m:
+                raise TypingError(f"bad dim syntax: {p!r}")
+            if m.group(4) is not None:
+                n = int(m.group(4))
+                dims.append(DistDim(n, (), n))
+            else:
+                tile, axes_s, glob = int(m.group(1)), m.group(2), int(m.group(3))
+                axes = tuple(a.strip() for a in axes_s.split(",") if a.strip())
+                dims.append(DistDim(tile, axes, glob))
+    return DistType(tuple(dims))
+
+
+def decompose_type(t: DistType, mesh: Mesh) -> DistType:
+    """Rewrite ``t`` over the prime-decomposed mesh of ``mesh``.
+
+    An axis x of size 12 = 2*2*3 partitioning a dimension is replaced by its
+    sub-axes ``x@0,x@1,x@2`` (minor-to-major) in the same position, which
+    preserves the base offset map exactly (same mixed-radix split).
+    """
+    _, submap = mesh.decompose_primes()
+    dims = []
+    for d in t.dims:
+        axes: list[str] = []
+        for a in d.axes:
+            axes.extend(submap[a])
+        dims.append(DistDim(d.tile, tuple(axes), d.global_))
+    return DistType(tuple(dims))

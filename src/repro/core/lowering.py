@@ -1,0 +1,290 @@
+"""Lowering weak plans to physical plans (paper §6, Thm 6.4/6.7, §7.3).
+
+Input: a *normal form* weak plan (dynslice* alltoall* allgather*) plus the
+concrete endpoint types.  Output: a PhysicalPlan with at most ONE permute,
+hoisted before the trailing allgather block (§7.3: permuting smaller tiles
+is cheaper), and elided entirely when the device assignments line up.
+
+The lowering maintains the explicit device assignment β (base offsets per
+device) — the paper's ⟨φ, β⟩ — and exploits every degree of freedom to make
+the final permutation the identity:
+
+  * dynslice chunk choices are biased toward the target assignment
+    (§7.3 optimization 2), subject to replica-quota validity;
+  * the pre-gather assignment is obtained by pulling the target back
+    through the gather suffix, greedily matching the current assignment
+    (beyond-paper: this generalizes §7.3 and makes permutes vanish in the
+    common case, not just for gather-free plans).
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter, defaultdict
+
+import numpy as np
+
+from .dist_types import DistType, Mesh, TypingError
+from .normal_form import is_normal_form, normalize
+from .offsets import base_offset_map, find_permutation
+from .plan import PAllToAll, PGather, PPermute, PSlice, PhysicalPlan
+from .weak import WeakOp, mesh_prime_pool
+
+
+def lower(weak_ops: list[WeakOp], t1: DistType, t2: DistType, mesh: Mesh,
+          *, hoist_permute: bool = True, match_assignment: bool = True
+          ) -> PhysicalPlan:
+    """Lower a weak plan into a physical plan over explicit device ids."""
+    pool = mesh_prime_pool(mesh)
+    globaltype = t1.globaltype()
+    if not is_normal_form([op.kind for op in weak_ops]):
+        weak_ops = normalize(weak_ops, t1.localtype(), globaltype, pool)
+
+    n_dev = mesh.nelems
+    beta = base_offset_map(t1, mesh).copy()
+    beta2 = base_offset_map(t2, mesh)
+    c = list(t1.localtype())
+    ops: list = []
+
+    slices = [op for op in weak_ops if op.kind == "dynslice"]
+    a2as = [op for op in weak_ops if op.kind == "alltoall"]
+    gathers = [op for op in weak_ops if op.kind == "allgather"]
+
+    # ---- dynslice prefix (local, zero transfer) -------------------------
+    for op in slices:
+        beta, phys = _lower_slice(op, beta, c, beta2,
+                                  bias=match_assignment)
+        c[op.i] //= op.m
+        ops.append(phys)
+
+    # ---- alltoall middle ------------------------------------------------
+    for op in a2as:
+        beta, phys = _lower_alltoall(op, beta, c)
+        c[op.i] *= op.m
+        c[op.j] //= op.m
+        ops.append(phys)
+
+    # ---- hoisted permute + allgather suffix -----------------------------
+    if gathers:
+        beta_req = _pullback_target(gathers, beta, beta2, c,
+                                    match_current=match_assignment)
+        perm = find_permutation(beta, beta_req)
+        if not np.array_equal(perm, np.arange(n_dev)):
+            if hoist_permute:
+                ops.append(PPermute(tuple(int(x) for x in perm)))
+                beta = beta_req
+            # else: fall through; a final permute is emitted below.
+        else:
+            beta = beta_req
+        for op in gathers:
+            beta, phys = _lower_gather(op, beta, c)
+            c[op.i] *= op.m
+            ops.append(phys)
+
+    # ---- final safety permute (Thm 6.7 worst case) ----------------------
+    if not np.array_equal(beta, beta2):
+        perm = find_permutation(beta, beta2)
+        if not np.array_equal(perm, np.arange(n_dev)):
+            ops.append(PPermute(tuple(int(x) for x in perm)))
+        beta = beta2
+
+    plan = PhysicalPlan(
+        ops=ops,
+        src_localtype=t1.localtype(),
+        dst_localtype=t2.localtype(),
+        globaltype=globaltype,
+        n_devices=n_dev,
+        beta_src=base_offset_map(t1, mesh),
+        beta_dst=beta2,
+    )
+    if plan.n_permutes() > 1:
+        raise TypingError(
+            f"lowering produced {plan.n_permutes()} permutes (Thm 6.7 "
+            f"guarantees at most one): {plan.describe()}")
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-op lowering
+# ---------------------------------------------------------------------------
+
+
+def _replica_classes(beta: np.ndarray) -> dict[tuple, list[int]]:
+    classes: dict[tuple, list[int]] = defaultdict(list)
+    for d in range(beta.shape[0]):
+        classes[tuple(beta[d])].append(d)
+    return classes
+
+
+def _lower_slice(op: WeakOp, beta: np.ndarray, c: list[int],
+                 beta2: np.ndarray, bias: bool):
+    """dynslice(i, m): every device keeps one of m chunks of dim i.
+
+    Validity: within each replica class (devices holding identical tiles,
+    class size R with m | R), each chunk must be kept by exactly R/m
+    devices.  Preference: the chunk overlapping the device's target region.
+    """
+    i, m = op.i, op.m
+    newc = c[i] // m
+    n_dev = beta.shape[0]
+    idx = np.full(n_dev, -1, dtype=np.int64)
+    for _, devs in _replica_classes(beta).items():
+        R = len(devs)
+        if R % m:
+            raise TypingError(
+                f"dynslice({i},{m}): replica class of size {R} not divisible")
+        quota = [R // m] * m
+        leftover = []
+        for d in devs:
+            k = (int(beta2[d, i]) - int(beta[d, i])) // newc if bias else -1
+            if 0 <= k < m and quota[k] > 0:
+                idx[d] = k
+                quota[k] -= 1
+            else:
+                leftover.append(d)
+        ki = 0
+        for d in leftover:
+            while quota[ki] == 0:
+                ki += 1
+            idx[d] = ki
+            quota[ki] -= 1
+    new_beta = beta.copy()
+    new_beta[:, i] += idx * newc
+    return new_beta, PSlice(i, m, tuple(int(x) for x in idx))
+
+
+def _lower_alltoall(op: WeakOp, beta: np.ndarray, c: list[int]):
+    """alltoall(i->j, m): groups hold the m chunks of one dim-i block.
+
+    Group order is ascending dim-i offset (required so the concatenation
+    along dim i forms a contiguous tile); the device at rank k keeps the
+    k-th split of dim j.  Replicas of the same tile land at the same rank
+    in different groups and therefore stay replicas.
+    """
+    i, j, m = op.i, op.j, op.m
+    block = c[i] * m
+    newcj = c[j] // m
+    # Class key: all offsets with dim i floored to its block.
+    cls: dict[tuple, list[int]] = defaultdict(list)
+    for d in range(beta.shape[0]):
+        key = list(beta[d])
+        key[i] = beta[d, i] // block
+        cls[tuple(key)].append(d)
+    groups = []
+    for key, devs in sorted(cls.items()):
+        # split by chunk rank within the block
+        by_rank: dict[int, list[int]] = defaultdict(list)
+        for d in devs:
+            by_rank[int((beta[d, i] % block) // c[i])].append(d)
+        R = len(by_rank[0])
+        if any(len(v) != R for v in by_rank.values()) or len(by_rank) != m:
+            raise TypingError(f"alltoall({i}->{j},{m}): ragged groups")
+        for r in range(R):
+            groups.append(tuple(by_rank[k][r] for k in range(m)))
+    new_beta = beta.copy()
+    for g in groups:
+        for k, d in enumerate(g):
+            new_beta[d, i] = (beta[d, i] // block) * block
+            new_beta[d, j] = beta[d, j] + k * newcj
+    return new_beta, PAllToAll(i, j, tuple(groups))
+
+
+def _lower_gather(op: WeakOp, beta: np.ndarray, c: list[int]):
+    """allgather(i, m): groups hold the m chunks of one output tile."""
+    i, m = op.i, op.m
+    block = c[i] * m
+    cls: dict[tuple, list[int]] = defaultdict(list)
+    for d in range(beta.shape[0]):
+        key = list(beta[d])
+        key[i] = beta[d, i] // block
+        cls[tuple(key)].append(d)
+    groups = []
+    for key, devs in sorted(cls.items()):
+        by_rank: dict[int, list[int]] = defaultdict(list)
+        for d in devs:
+            by_rank[int((beta[d, i] % block) // c[i])].append(d)
+        R = len(by_rank.get(0, []))
+        if len(by_rank) != m or any(len(v) != R for v in by_rank.values()):
+            raise TypingError(f"allgather({i},{m}): ragged groups "
+                              f"{dict((k, len(v)) for k, v in by_rank.items())}")
+        for r in range(R):
+            groups.append(tuple(by_rank[k][r] for k in range(m)))
+    new_beta = beta.copy()
+    new_beta[:, i] = (beta[:, i] // block) * block
+    return new_beta, PGather(i, tuple(groups))
+
+
+def _pullback_target(gathers: list[WeakOp], beta_cur: np.ndarray,
+                     beta2: np.ndarray, c: list[int], match_current: bool
+                     ) -> np.ndarray:
+    """Pull the target assignment back through the gather suffix.
+
+    Returns β_req: an assignment at pre-gather localtype such that running
+    the gathers from β_req lands exactly on β2.  Each device's pre-gather
+    tile must lie inside its target tile; chunk choices are matched
+    greedily against the current assignment so the hoisted permute is the
+    identity whenever possible.
+    """
+    n_dev = beta_cur.shape[0]
+    rank = beta_cur.shape[1]
+    # Total gather factor per dim.
+    factor = [1] * rank
+    for op in gathers:
+        factor[op.i] *= op.m
+    pre_tile = list(c)  # localtype before gathers
+
+    # Quota: every pre-gather tile must be held by exactly R_pre devices.
+    n_tiles_pre = 1
+    for d in range(rank):
+        # number of distinct tiles along dim d at pre-gather localtype
+        n_tiles_pre *= _n_distinct(beta_cur[:, d], pre_tile[d])
+    R_pre = n_dev // n_tiles_pre
+
+    quota: Counter = Counter()
+    for d in range(n_dev):
+        for combo in _chunk_combos(beta2[d], factor, pre_tile):
+            quota[combo] = R_pre
+    beta_req = np.zeros_like(beta_cur)
+    assigned: Counter = Counter()
+    leftover = []
+    for d in range(n_dev):
+        cur = tuple(int(x) for x in beta_cur[d])
+        if match_current and _inside(cur, beta2[d], factor, pre_tile) \
+                and assigned[cur] < quota[cur]:
+            beta_req[d] = cur
+            assigned[cur] += 1
+        else:
+            leftover.append(d)
+    for d in leftover:
+        for combo in _chunk_combos(beta2[d], factor, pre_tile):
+            if assigned[combo] < quota[combo]:
+                beta_req[d] = combo
+                assigned[combo] += 1
+                break
+        else:
+            raise TypingError("pullback: no chunk quota left (invalid plan)")
+    return beta_req
+
+
+def _n_distinct(col: np.ndarray, tile: int) -> int:
+    # Offsets are already tile-aligned; distinct offsets = distinct tiles.
+    return len(np.unique(col))
+
+
+def _inside(pre: tuple, tgt_row: np.ndarray, factor, pre_tile) -> bool:
+    for dim, (o, t) in enumerate(zip(pre, tgt_row)):
+        lo = int(t)
+        hi = lo + pre_tile[dim] * factor[dim]
+        if not (lo <= o < hi and (o - lo) % pre_tile[dim] == 0):
+            return False
+    return True
+
+
+def _chunk_combos(tgt_row: np.ndarray, factor, pre_tile):
+    """All pre-gather offset rows inside a target tile (row-major order)."""
+    import itertools
+    ranges = []
+    for dim in range(len(pre_tile)):
+        base = int(tgt_row[dim])
+        ranges.append([base + k * pre_tile[dim] for k in range(factor[dim])])
+    for combo in itertools.product(*ranges):
+        yield tuple(combo)

@@ -1,0 +1,123 @@
+"""Normal forms for sequences of collectives (paper §4.3, §5).
+
+A sequence is in *normal form* when its ops match
+``dynslice* {alltoall|allpermute}* allgather*`` (Def. 4.5).  Normal forms
+solve the memory-constrained redistribution problem: localsize only falls
+during the dynslice prefix, stays flat in the middle, and only rises during
+the allgather suffix.
+
+``normalize`` implements the constructive proof of Thm 4.8 on *weak* plans
+(no allpermute — §5 makes the lemmas' case analyses permutation-free):
+ops are exploded into prime-factor steps, adjacent out-of-order pairs are
+rewritten per Lemmas 4.6/4.7 (which may *merge or cancel* ops, never
+increasing Fig. 11 cost — Lemma 6.5), and finally adjacent same-kind ops
+are re-merged (§7.1).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import Counter
+
+from .dist_types import TypingError, prime_factors
+from .weak import WeakOp, plan_cost, weak_apply, weak_apply_seq
+
+_NF_RE = re.compile(r"^(d)*(t|p)*(g)*$")
+_KIND_CODE = {"dynslice": "d", "alltoall": "t", "allpermute": "p",
+              "allgather": "g"}
+_RANK = {"dynslice": 0, "alltoall": 1, "allpermute": 1, "allgather": 2}
+
+
+def is_normal_form(kinds) -> bool:
+    return bool(_NF_RE.match("".join(_KIND_CODE[k] for k in kinds)))
+
+
+def explode_primes(ops: list[WeakOp]) -> list[WeakOp]:
+    """Split every multi-axis op into single-prime steps (Principle 1)."""
+    out: list[WeakOp] = []
+    for op in ops:
+        for p in prime_factors(op.m):
+            out.append(WeakOp(op.kind, op.i, p, op.j))
+    return out
+
+
+def merge_adjacent(ops: list[WeakOp]) -> list[WeakOp]:
+    """§7.1 — merge adjacent same-kind ops on the same dimension(s)."""
+    out: list[WeakOp] = []
+    for op in ops:
+        if out and out[-1].kind == op.kind and out[-1].i == op.i \
+                and out[-1].j == op.j:
+            out[-1] = WeakOp(op.kind, op.i, out[-1].m * op.m, op.j)
+        else:
+            out.append(op)
+    return out
+
+
+def _rewrite_pair(a: WeakOp, b: WeakOp) -> list[WeakOp] | None:
+    """Rewrite an adjacent out-of-order pair (a before b, rank(a)>rank(b)).
+
+    Returns the replacement list, or None if (a, b) is already in order.
+    All cases follow the weak versions of Lemmas 4.6/4.7 with prime m.
+    """
+    ra, rb = _RANK[a.kind], _RANK[b.kind]
+    if ra <= rb:
+        return None
+    p, q = a.m, b.m
+    if a.kind == "allgather" and b.kind == "dynslice":
+        # Peak Lemma 4.6 (weak): gather(i,p) ; slice(j,q)
+        if a.i == b.i and p == q:
+            return []                                    # case (1): cancel
+        if a.i != b.i and p == q:
+            return [WeakOp("alltoall", a.i, p, b.i)]     # case (3): fuse
+        return [b, a]                                    # cases (2)/(4): swap
+    if a.kind == "allgather" and b.kind == "alltoall":
+        # Rising edge Lemma 4.7: gather(i,p) ; alltoall(k->l,q)
+        if a.i == b.j and p == q:
+            return [WeakOp("allgather", b.i, p)]         # merge into one gather
+        return [b, a]                                    # commute / reassociate
+    if a.kind == "alltoall" and b.kind == "dynslice":
+        # Falling edge Lemma 4.7 (dual): alltoall(k->l,p) ; slice(i,q)
+        if b.i == a.i and p == q:
+            return [WeakOp("dynslice", a.j, p)]          # net effect: slice dst
+        return [b, a]
+    raise AssertionError(f"unexpected pair {a} ; {b}")
+
+
+def normalize(ops: list[WeakOp], c0, globaltype, pool: Counter,
+              max_steps: int = 100_000) -> list[WeakOp]:
+    """Thm 4.8 (weak): rewrite any weak plan into normal form.
+
+    The result is type-correct from ``c0``, reaches the same weak endpoint,
+    and never costs more than the input plan (Lemma 6.5).
+    """
+    seq = explode_primes(ops)
+    end = weak_apply_seq(ops, c0, globaltype, pool)[-1]
+    steps = 0
+    changed = True
+    while changed:
+        changed = False
+        for idx in range(len(seq) - 1):
+            repl = _rewrite_pair(seq[idx], seq[idx + 1])
+            if repl is not None:
+                seq = seq[:idx] + repl + seq[idx + 2:]
+                changed = True
+                steps += 1
+                if steps > max_steps:
+                    raise TypingError("normalization did not terminate")
+                break
+    # Validate the rewritten plan end-to-end.
+    got = weak_apply_seq(seq, c0, globaltype, pool)[-1]
+    if got != end:
+        raise TypingError(
+            f"normalization changed the endpoint: {got} != {end}")
+    if not is_normal_form([op.kind for op in seq]):
+        raise TypingError(f"normalization failed: {[str(o) for o in seq]}")
+    return merge_adjacent(seq)
+
+
+def assert_cost_nonincreasing(before: list[WeakOp], after: list[WeakOp],
+                              c0, globaltype, pool: Counter) -> None:
+    cb = plan_cost(before, c0, globaltype, pool)
+    ca = plan_cost(after, c0, globaltype, pool)
+    if ca > cb:
+        raise AssertionError(f"normalization increased cost {cb} -> {ca}")

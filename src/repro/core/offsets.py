@@ -1,0 +1,123 @@
+"""Semantics of distributed types: base offset maps (paper Fig. 7a, §4.1).
+
+``D[[c{x,xs}n]](i) = c*i_x + D[[(c*k){xs}n]](i)`` — each axis in a dimension
+contributes ``stride * coord`` where strides grow minor-to-major.
+
+The *base offset map* ``T[[τ]]`` assigns to every mesh coordinate the base
+offset tuple of the tile held by that device.  We materialize it as an
+integer array of shape ``(n_devices, rank)`` in device-id order, which makes
+device assignments (§6), equivalence checks (Def. 5.2/6.2), and permutation
+synthesis straightforward.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .dist_types import DistDim, DistType, Mesh, TypingError
+
+
+def axis_strides(d: DistDim, mesh: Mesh) -> dict[str, int]:
+    """Stride (in global elements along this dim) of each axis of ``d``."""
+    out: dict[str, int] = {}
+    c = d.tile
+    for a in d.axes:
+        out[a] = c
+        c *= mesh.size(a)
+    if c != d.global_:
+        raise TypingError(f"dim {d} does not tile its global size")
+    return out
+
+
+def dim_offset(d: DistDim, mesh: Mesh, coord: dict[str, int]) -> int:
+    """D[[d]] at a device coordinate (coord maps axis name -> index)."""
+    off = 0
+    for a, s in axis_strides(d, mesh).items():
+        off += s * coord[a]
+    return off
+
+
+def base_offset_map(t: DistType, mesh: Mesh) -> np.ndarray:
+    """T[[τ]] as an ``(n_devices, rank)`` int array in device-id order."""
+    n = mesh.nelems
+    out = np.zeros((n, t.rank), dtype=np.int64)
+    # Vectorized: for each axis, add stride * coord over the raveled mesh.
+    names = mesh.names
+    sizes = np.array([mesh.size(a) for a in names], dtype=np.int64)
+    # coordinate of every device along every mesh axis
+    coords = np.stack(
+        np.unravel_index(np.arange(n), tuple(sizes)), axis=1)  # (n, n_axes)
+    for j, d in enumerate(t.dims):
+        for a, s in axis_strides(d, mesh).items():
+            ai = names.index(a)
+            out[:, j] += s * coords[:, ai]
+    return out
+
+
+def equivalent(beta1: np.ndarray, beta2: np.ndarray) -> bool:
+    """Def. 5.2: β1 ~ β2 iff related by a device permutation.
+
+    Because base offset maps of well-formed types hit every tile the same
+    number of times, this is equivalent to equality as multisets of rows.
+    """
+    if beta1.shape != beta2.shape:
+        return False
+    a = beta1[np.lexsort(beta1.T[::-1])]
+    b = beta2[np.lexsort(beta2.T[::-1])]
+    return bool(np.array_equal(a, b))
+
+
+def find_permutation(beta_src: np.ndarray, beta_dst: np.ndarray) -> np.ndarray:
+    """Find π with ``beta_dst[d] == beta_src[π[d]]`` (data for device d comes
+    from device π[d]).  Raises if the maps are not equivalent.
+
+    When tiles are replicated the matching is greedy with a preference for
+    the identity (devices keep their own tile when possible) — this is what
+    makes the final allpermute of Thm 6.7 vanish in the common case.
+    """
+    n = beta_src.shape[0]
+    if not equivalent(beta_src, beta_dst):
+        raise TypingError("base offset maps are not permutation-equivalent")
+    key_src: dict[tuple, list[int]] = {}
+    for i in range(n):
+        key_src.setdefault(tuple(beta_src[i]), []).append(i)
+    pi = np.full(n, -1, dtype=np.int64)
+    # First pass: identity matches.
+    for d in range(n):
+        k = tuple(beta_dst[d])
+        lst = key_src.get(k, [])
+        if d in lst:
+            lst.remove(d)
+            pi[d] = d
+    # Second pass: arbitrary assignment for the rest.
+    for d in range(n):
+        if pi[d] < 0:
+            k = tuple(beta_dst[d])
+            pi[d] = key_src[k].pop()
+    return pi
+
+
+def tile_of(global_arr: np.ndarray, offsets, local_shape) -> np.ndarray:
+    """Slice the tile with the given base offsets out of a global array."""
+    slices = tuple(slice(o, o + c) for o, c in zip(offsets, local_shape))
+    return global_arr[slices]
+
+
+def assemble_global(tiles: dict[int, np.ndarray], beta: np.ndarray,
+                    global_shape) -> np.ndarray:
+    """Reassemble (and cross-check) the global array from per-device tiles."""
+    out = np.full(global_shape, np.nan)
+    filled = np.zeros(global_shape, dtype=bool)
+    for dev, tile in tiles.items():
+        offs = beta[dev]
+        slices = tuple(slice(int(o), int(o) + s)
+                       for o, s in zip(offs, tile.shape))
+        region = out[slices]
+        if filled[slices].any():
+            if not np.array_equal(region, tile):
+                raise AssertionError(
+                    f"inconsistent replicated tiles at device {dev}")
+        out[slices] = tile
+        filled[slices] = True
+    if not filled.all():
+        raise AssertionError("tiles do not cover the global array")
+    return out

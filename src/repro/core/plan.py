@@ -1,0 +1,128 @@
+"""Physical redistribution plans (paper §6 — low-level MPI-style collectives).
+
+A physical op addresses *explicit devices* ("ranks"), which is how the
+paper's device maps ⟨φ, β⟩ are realized on a fixed SPMD mesh: instead of
+permuting data so an axis is minor-most, collectives run over explicit
+device groups (MPI communicators / XLA replica groups /
+``jax.lax.*(axis_index_groups=...)``) and the bookkeeping of *which logical
+axis that was* lives in the evolving device assignment β.
+
+Ops:
+  PSlice(dim, factor, chunk_index) — local dynamic-slice; device d keeps
+      chunk ``chunk_index[d]`` of its tile along ``dim``.
+  PGather(dim, groups)             — all-gather; each group lists the devices
+      holding the chunks of one output tile, ascending by base offset.
+  PAllToAll(src, dst, groups)      — all-to-all moving partitioning from dim
+      ``src`` (gathered) to dim ``dst`` (split m ways).
+  PPermute(src_for)                — tile permutation; device d receives the
+      tile of device ``src_for[d]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSlice:
+    dim: int
+    factor: int
+    chunk_index: tuple[int, ...]   # per-device chunk choice, len = n_devices
+
+    def describe(self) -> str:
+        return f"pslice(dim={self.dim}, m={self.factor})"
+
+
+@dataclasses.dataclass(frozen=True)
+class PGather:
+    dim: int
+    groups: tuple[tuple[int, ...], ...]
+
+    @property
+    def factor(self) -> int:
+        return len(self.groups[0])
+
+    def describe(self) -> str:
+        return f"pgather(dim={self.dim}, m={self.factor}, groups={len(self.groups)})"
+
+
+@dataclasses.dataclass(frozen=True)
+class PAllToAll:
+    src: int
+    dst: int
+    groups: tuple[tuple[int, ...], ...]
+
+    @property
+    def factor(self) -> int:
+        return len(self.groups[0])
+
+    def describe(self) -> str:
+        return (f"palltoall({self.src}->{self.dst}, m={self.factor}, "
+                f"groups={len(self.groups)})")
+
+
+@dataclasses.dataclass(frozen=True)
+class PPermute:
+    src_for: tuple[int, ...]       # device d's new tile comes from src_for[d]
+
+    def describe(self) -> str:
+        moved = sum(1 for d, s in enumerate(self.src_for) if d != s)
+        return f"ppermute(moved={moved}/{len(self.src_for)})"
+
+
+PhysOp = Union[PSlice, PGather, PAllToAll, PPermute]
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    """A fully lowered redistribution program."""
+    ops: list            # list[PhysOp]
+    src_localtype: tuple[int, ...]
+    dst_localtype: tuple[int, ...]
+    globaltype: tuple[int, ...]
+    n_devices: int
+    beta_src: np.ndarray   # (n_dev, rank) — T[[τ1]]
+    beta_dst: np.ndarray   # (n_dev, rank) — T[[τ2]]
+
+    def kinds(self) -> list[str]:
+        names = {PSlice: "dynslice", PGather: "allgather",
+                 PAllToAll: "alltoall", PPermute: "allpermute"}
+        return [names[type(o)] for o in self.ops]
+
+    def localtypes(self) -> list[tuple[int, ...]]:
+        """Per-step localtypes τ0..τn (for height/cost accounting)."""
+        cur = list(self.src_localtype)
+        out = [tuple(cur)]
+        for op in self.ops:
+            if isinstance(op, PSlice):
+                cur[op.dim] //= op.factor
+            elif isinstance(op, PGather):
+                cur[op.dim] *= op.factor
+            elif isinstance(op, PAllToAll):
+                cur[op.src] *= op.factor
+                cur[op.dst] //= op.factor
+            out.append(tuple(cur))
+        return out
+
+    def height(self) -> int:
+        return max(math.prod(c) for c in self.localtypes())
+
+    def cost(self) -> int:
+        """Fig. 11 cost (elements per device)."""
+        from .costmodel import step_cost
+        total = 0
+        lts = self.localtypes()
+        for op, cin, cout in zip(self.ops, lts[:-1], lts[1:]):
+            kind = {PSlice: "dynslice", PGather: "allgather",
+                    PAllToAll: "alltoall", PPermute: "allpermute"}[type(op)]
+            total += step_cost(kind, math.prod(cin), math.prod(cout))
+        return total
+
+    def n_permutes(self) -> int:
+        return sum(isinstance(o, PPermute) for o in self.ops)
+
+    def describe(self) -> str:
+        return " ; ".join(op.describe() for op in self.ops) or "<identity>"

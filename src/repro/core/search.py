@@ -1,0 +1,164 @@
+"""Shortest-path synthesis of redistribution plans (paper §7.2).
+
+Dijkstra over weak types (= localtypes with fixed globaltype).  Edges are
+multi-axis weak collectives; weights follow the Fig. 11 cost model (or,
+beyond the paper, a latency/bandwidth-aware time model — the paper's own
+suggested future work, fixing its Fig. 13 small-transfer slowdowns).
+
+The node set is restricted to localtypes whose localsize does not exceed
+``max(localsize(τ1), localsize(τ2))`` — so *every* returned plan solves the
+memory-constrained redistribution problem by construction.  Zero-cost
+dynslice edges give over-partitioning (§7.2) for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import Counter
+
+from .costmodel import HardwareModel, step_cost
+from .dist_types import DistType, Mesh, TypingError, prime_factors
+from .weak import WeakOp, divisors, fits, free_primes, mesh_prime_pool
+
+
+class SearchError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class SearchResult:
+    ops: list[WeakOp]
+    cost: int                # paper cost (elements transferred per device)
+    time: float              # hardware-model time (if used; else 0.0)
+    nodes_expanded: int
+    height: int              # max localsize along the plan
+
+
+def synthesize(t1: DistType, t2: DistType, mesh: Mesh, *,
+               objective: str = "paper",
+               hw: HardwareModel | None = None,
+               memory_factor: float = 1.0,
+               max_nodes: int = 500_000) -> SearchResult:
+    """Find a (near-)optimal weak plan from τ1 to τ2.
+
+    objective:
+      "paper" — minimize Fig. 11 transfer cost (tie-break: fewer ops).
+      "time"  — minimize HardwareModel time (latency-aware; beyond paper).
+    memory_factor: scales the memory bound (1.0 = the paper's bound); the
+      paper's §8 mentions trading memory for run-time as future work.
+    """
+    if t1.globaltype() != t2.globaltype():
+        raise TypingError(
+            f"invalid redistribution: globaltypes differ "
+            f"{t1.globaltype()} vs {t2.globaltype()}")
+    globaltype = t1.globaltype()
+    pool = mesh_prime_pool(mesh)
+    src = t1.localtype()
+    dst = t2.localtype()
+    # Validate both endpoints use only mesh primes.
+    free_primes(src, globaltype, pool)
+    free_primes(dst, globaltype, pool)
+
+    bound = int(max(math.prod(src), math.prod(dst)) * memory_factor)
+    hw = hw or HardwareModel()
+    use_time = objective == "time"
+
+    def edge_weight(kind, lin, lout):
+        if use_time:
+            return hw.step_time(kind, lin, lout)
+        return step_cost(kind, lin, lout)
+
+    # Dijkstra.  Entries: (weight, n_ops, tiebreak, node)
+    start = tuple(src)
+    goal = tuple(dst)
+    dist: dict[tuple, float] = {start: 0.0}
+    nops: dict[tuple, int] = {start: 0}
+    parent: dict[tuple, tuple] = {}   # node -> (prev_node, op)
+    pq: list = [(0.0, 0, start)]
+    expanded = 0
+    seen: set[tuple] = set()
+
+    while pq:
+        w, k, node = heapq.heappop(pq)
+        if node in seen:
+            continue
+        seen.add(node)
+        expanded += 1
+        if expanded > max_nodes:
+            raise SearchError(f"search exceeded {max_nodes} nodes")
+        if node == goal:
+            ops: list[WeakOp] = []
+            cur = node
+            while cur != start:
+                prev, op = parent[cur]
+                ops.append(op)
+                cur = prev
+            ops.reverse()
+            from .weak import plan_cost, plan_height
+            return SearchResult(
+                ops=ops,
+                cost=plan_cost(ops, start, globaltype, pool),
+                time=_plan_time(ops, start, globaltype, pool, hw) if use_time else 0.0,
+                nodes_expanded=expanded,
+                height=plan_height(ops, start, globaltype, pool),
+            )
+        lsize = math.prod(node)
+        free = free_primes(node, globaltype, pool)
+        for op, nxt in _edges(node, globaltype, free, bound):
+            ew = edge_weight(op.kind, lsize, math.prod(nxt))
+            nw = w + ew
+            nk = k + 1
+            if nxt not in dist or (nw, nk) < (dist[nxt], nops.get(nxt, 1 << 60)):
+                dist[nxt] = nw
+                nops[nxt] = nk
+                parent[nxt] = (node, op)
+                heapq.heappush(pq, (nw, nk, nxt))
+
+    raise SearchError(f"no plan found from {t1} to {t2} (bound={bound})")
+
+
+def _edges(node, globaltype, free: Counter, bound: int):
+    """Enumerate weak edges from a localtype node."""
+    r = len(node)
+    lsize = math.prod(node)
+    free_prod = 1
+    for p, cnt in free.items():
+        free_prod *= p ** cnt
+    for i in range(r):
+        c_i = node[i]
+        q_i = globaltype[i] // c_i
+        # allgather(i, m): m | q_i
+        for m in divisors(q_i):
+            if m <= 1:
+                continue
+            if lsize * m <= bound:
+                nxt = node[:i] + (c_i * m,) + node[i + 1:]
+                yield WeakOp("allgather", i, m), nxt
+        # dynslice(i, m): m | c_i, primes(m) within free pool
+        for m in divisors(math.gcd(c_i, free_prod)):
+            if m <= 1 or not fits(m, free):
+                continue
+            nxt = node[:i] + (c_i // m,) + node[i + 1:]
+            yield WeakOp("dynslice", i, m), nxt
+        # alltoall(i, j, m): m | q_i and m | c_j
+        if q_i > 1:
+            for j in range(r):
+                if j == i:
+                    continue
+                for m in divisors(math.gcd(q_i, node[j])):
+                    if m <= 1:
+                        continue
+                    nxt = list(node)
+                    nxt[i] = c_i * m
+                    nxt[j] = node[j] // m
+                    yield WeakOp("alltoall", i, m, j), tuple(nxt)
+
+
+def _plan_time(ops, c0, globaltype, pool, hw: HardwareModel) -> float:
+    from .weak import weak_apply_seq
+    types = weak_apply_seq(ops, c0, globaltype, pool)
+    t = 0.0
+    for op, cin, cout in zip(ops, types[:-1], types[1:]):
+        t += hw.step_time(op.kind, math.prod(cin), math.prod(cout))
+    return t

@@ -1,0 +1,139 @@
+"""Weak semantic types (paper §5) and weak collective operations.
+
+A weak type ``E[[τ]]`` is the equivalence class of base offset maps up to a
+device permutation (Def. 5.2).  With a fixed globaltype, a weak type is
+fully identified by the *localtype* (§7.2), so weak nodes are plain tuples
+of per-dimension tile sizes.  Weak ops never include allpermute (Def. 5.3).
+
+Weak ops are *multi-axis merged* (§7.1): they move an arbitrary factor
+``m > 1`` whose prime decomposition maps onto mesh sub-axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from collections import Counter
+from typing import Iterable
+
+from .dist_types import DistType, Mesh, TypingError, prime_factors
+
+
+@dataclasses.dataclass(frozen=True)
+class WeakOp:
+    """kind in {dynslice, allgather, alltoall}; moves factor ``m``.
+
+    dynslice(i, m):       c_i /= m  (uses free mesh primes)
+    allgather(i, m):      c_i *= m  (releases primes partitioning dim i)
+    alltoall(i, j, m):    c_i *= m ; c_j /= m
+    """
+    kind: str
+    i: int
+    m: int
+    j: int | None = None
+
+    def __str__(self):
+        if self.kind == "alltoall":
+            return f"alltoall({self.i}->{self.j}, m={self.m})"
+        return f"{self.kind}({self.i}, m={self.m})"
+
+
+@functools.lru_cache(maxsize=None)
+def divisors(n: int) -> tuple[int, ...]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            if d != n // d:
+                out.append(n // d)
+        d += 1
+    return tuple(sorted(out))
+
+
+def mesh_prime_pool(mesh: Mesh) -> Counter:
+    pool: Counter = Counter()
+    for _, k in mesh.axes:
+        pool.update(prime_factors(k))
+    return pool
+
+
+def used_primes(localtype: tuple[int, ...], globaltype: tuple[int, ...]) -> Counter:
+    used: Counter = Counter()
+    for c, s in zip(localtype, globaltype):
+        if s % c != 0:
+            raise TypingError(f"localtype {localtype} does not divide {globaltype}")
+        used.update(prime_factors(s // c))
+    return used
+
+
+def free_primes(localtype, globaltype, pool: Counter) -> Counter:
+    used = used_primes(localtype, globaltype)
+    free = pool - used
+    if sum((used - pool).values()):
+        raise TypingError(
+            f"localtype {localtype} uses primes not in the mesh: {used - pool}")
+    return free
+
+
+def fits(m: int, pool: Counter) -> bool:
+    return not (Counter(prime_factors(m)) - pool)
+
+
+def weak_apply(op: WeakOp, c: tuple[int, ...], globaltype, pool: Counter
+               ) -> tuple[int, ...]:
+    """Apply a weak op to a localtype; checks preconditions."""
+    c = list(c)
+    if op.m <= 1:
+        raise TypingError("weak ops must move a factor m > 1")
+    if op.kind == "dynslice":
+        if c[op.i] % op.m:
+            raise TypingError(f"dynslice: {c[op.i]} % {op.m} != 0")
+        if not fits(op.m, free_primes(tuple(c), globaltype, pool)):
+            raise TypingError(f"dynslice: no free axes for factor {op.m}")
+        c[op.i] //= op.m
+    elif op.kind == "allgather":
+        q = globaltype[op.i] // c[op.i]
+        if q % op.m:
+            raise TypingError(f"allgather: dim {op.i} partition {q} % {op.m} != 0")
+        c[op.i] *= op.m
+    elif op.kind == "alltoall":
+        if op.j is None or op.j == op.i:
+            raise TypingError("alltoall needs distinct dims")
+        q = globaltype[op.i] // c[op.i]
+        if q % op.m:
+            raise TypingError(f"alltoall: dim {op.i} partition {q} % {op.m} != 0")
+        if c[op.j] % op.m:
+            raise TypingError(f"alltoall: {c[op.j]} % {op.m} != 0")
+        c[op.i] *= op.m
+        c[op.j] //= op.m
+    else:
+        raise TypingError(f"unknown weak op {op.kind!r}")
+    return tuple(c)
+
+
+def weak_apply_seq(ops: Iterable[WeakOp], c: tuple[int, ...], globaltype,
+                   pool: Counter) -> list[tuple[int, ...]]:
+    out = [tuple(c)]
+    for op in ops:
+        out.append(weak_apply(op, out[-1], globaltype, pool))
+    return out
+
+
+def plan_height(ops, c0, globaltype, pool) -> int:
+    """Def. 4.4 — max localsize along the sequence."""
+    return max(math.prod(c) for c in weak_apply_seq(ops, c0, globaltype, pool))
+
+
+def plan_cost(ops, c0, globaltype, pool) -> int:
+    """Fig. 11 cost of a weak plan."""
+    from .costmodel import step_cost
+    types = weak_apply_seq(ops, c0, globaltype, pool)
+    total = 0
+    for op, cin, cout in zip(ops, types[:-1], types[1:]):
+        total += step_cost(op.kind, math.prod(cin), math.prod(cout))
+    return total
+
+
+def weak_of(t: DistType) -> tuple[int, ...]:
+    return t.localtype()

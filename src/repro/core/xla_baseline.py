@@ -1,0 +1,138 @@
+"""Baseline planner modelling the XLA SPMD partitioner's reshard heuristics.
+
+The paper (§8, RQ2) compares against XLA's redistribution, described as
+"carefully hand-crafted heuristics (that attempt, e.g., to synthesize
+alltoall sequences or to detect cases directly implementable via
+allpermute) with a fallback to allgather and dynslice (analogous to (2))".
+
+We model that pipeline:
+  A. identical types                      -> no-op
+  B. identical local types                -> one allpermute
+  C. single (multi-axis) alltoall pattern -> alltoall (+ final permute)
+  D. per-dimension gather/slice when no axis moves across dimensions
+  E. fallback: allgather everything, then dynslice everything
+     (memory peak = the full global array — exactly what the paper's
+     normal forms avoid).
+
+Plans are returned as PhysicalPlans via the shared lowering utilities so
+the interpreter / executor / cost model apply uniformly.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .dist_types import DistDim, DistType, Mesh, TypingError
+from .lowering import _lower_alltoall, _lower_gather, _lower_slice, lower
+from .offsets import base_offset_map, find_permutation
+from .plan import PPermute, PhysicalPlan
+from .weak import WeakOp
+
+
+def plan_xla(t1: DistType, t2: DistType, mesh: Mesh) -> PhysicalPlan:
+    if t1.globaltype() != t2.globaltype():
+        raise TypingError("invalid redistribution")
+    # Case A/B: permutation only (includes the identity).
+    if t1.localtype() == t2.localtype():
+        return _assemble([], t1, t2, mesh)
+    # Case C: single alltoall.
+    ops = _try_single_alltoall(t1, t2, mesh)
+    if ops is not None:
+        return _assemble(ops, t1, t2, mesh)
+    # Case D: per-dimension gather/slice (no cross-dimension moves).
+    ops = _try_dimwise(t1, t2, mesh)
+    if ops is not None:
+        return _assemble(ops, t1, t2, mesh)
+    # Case E: full replication fallback.
+    return _assemble(_fallback(t1, t2), t1, t2, mesh)
+
+
+def _try_single_alltoall(t1, t2, mesh):
+    lt1, lt2 = t1.localtype(), t2.localtype()
+    for i in range(t1.rank):
+        for j in range(t1.rank):
+            if i == j:
+                continue
+            d = t1.dims[i]
+            for k in range(1, len(d.axes) + 1):
+                m = math.prod(mesh.size(a) for a in d.axes[:k])
+                if lt2[i] == lt1[i] * m and lt2[j] * m == lt1[j] \
+                        and lt1[j] % m == 0:
+                    cand = list(lt1)
+                    cand[i] *= m
+                    cand[j] //= m
+                    if tuple(cand) == tuple(lt2):
+                        return [WeakOp("alltoall", i, m, j)]
+    return None
+
+
+def _try_dimwise(t1, t2, mesh):
+    """Gather/slice each dim independently; None if axes cross dims."""
+    gathers, slices = [], []
+    for i, (d1, d2) in enumerate(zip(t1.dims, t2.dims)):
+        if d1.tile == d2.tile:
+            continue
+        if d2.tile % d1.tile == 0:
+            gathers.append(WeakOp("allgather", i, d2.tile // d1.tile))
+        elif d1.tile % d2.tile == 0:
+            slices.append(WeakOp("dynslice", i, d1.tile // d2.tile))
+        else:
+            return None
+    # XLA's dim-wise path does not move axes across dimensions: require that
+    # every axis released by a gather is not re-used by a slice elsewhere.
+    released = set()
+    for op in gathers:
+        released.update(t1.dims[op.i].axes)
+    needed = set()
+    for op in slices:
+        needed.update(a for a in t2.dims[op.i].axes
+                      if a not in t1.dims[op.i].axes)
+    if released & needed:
+        return None
+    # XLA orders gathers first (it materializes, then slices).
+    return gathers + slices
+
+
+def _fallback(t1, t2):
+    """(2) in the paper: allgather every partitioned dim, then dynslice."""
+    ops = []
+    for i, d in enumerate(t1.dims):
+        if d.tile != d.global_:
+            ops.append(WeakOp("allgather", i, d.global_ // d.tile))
+    for i, d in enumerate(t2.dims):
+        if d.tile != d.global_:
+            ops.append(WeakOp("dynslice", i, d.global_ // d.tile))
+    return ops
+
+
+def _assemble(weak_ops, t1, t2, mesh) -> PhysicalPlan:
+    """Lower *in the given order* (no normal-form rewriting — the whole
+    point of the baseline is that its fallback is NOT memory-efficient)."""
+    n_dev = mesh.nelems
+    beta = base_offset_map(t1, mesh).copy()
+    beta2 = base_offset_map(t2, mesh)
+    c = list(t1.localtype())
+    ops = []
+    for op in weak_ops:
+        if op.kind == "dynslice":
+            beta, phys = _lower_slice(op, beta, c, beta2, bias=True)
+            c[op.i] //= op.m
+        elif op.kind == "allgather":
+            beta, phys = _lower_gather(op, beta, c)
+            c[op.i] *= op.m
+        elif op.kind == "alltoall":
+            beta, phys = _lower_alltoall(op, beta, c)
+            c[op.i] *= op.m
+            c[op.j] //= op.m
+        else:
+            raise TypingError(op.kind)
+        ops.append(phys)
+    if not np.array_equal(beta, beta2):
+        perm = find_permutation(beta, beta2)
+        if not np.array_equal(perm, np.arange(n_dev)):
+            ops.append(PPermute(tuple(int(x) for x in perm)))
+    return PhysicalPlan(
+        ops=ops, src_localtype=t1.localtype(), dst_localtype=t2.localtype(),
+        globaltype=t1.globaltype(), n_devices=n_dev,
+        beta_src=base_offset_map(t1, mesh), beta_dst=beta2)

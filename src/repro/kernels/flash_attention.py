@@ -1,0 +1,99 @@
+"""flash_attention — blockwise causal attention (Pallas TPU kernel).
+
+The framework's dominant compute hot-spot: the dry-run shows full-
+attention HLO materializing (B, H, S, S) fp32 score tensors (the 85 GB
+temp blow-up on stablelm train_4k).  This kernel keeps the working set in
+VMEM: grid (B*H, S/q_block), each program streams K/V in k_block chunks
+with the online-softmax recurrence, so HBM traffic is O(S·d) per head and
+the MXU sees (q_block × d) @ (d × k_block) matmuls with dims padded to
+128-multiples.
+
+GQA: q heads are grouped onto kv heads by index map (no materialized
+head repetition).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, q_block, k_block, seq_len,
+                  scale, causal):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # (q_block, d)
+    d = q.shape[-1]
+
+    m = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l = jnp.zeros((q_block,), jnp.float32)
+    acc = jnp.zeros((q_block, d), jnp.float32)
+
+    n_k = seq_len // k_block
+    # causal: key block j only contributes while j*k_block <= max q pos
+    hi = jax.lax.min(((qi + 1) * q_block + k_block - 1) // k_block,
+                     n_k) if causal else n_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * k_block, k_block),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * k_block, k_block),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                      # (q_block, k_block)
+        if causal:
+            qpos = qi * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 0)
+            kpos = j * k_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "k_block",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
+                    k_block: int = 128, interpret: bool = False):
+    """q: (B, H, S, d); k/v: (B, KV, S, d) with H % KV == 0."""
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    q_block = min(q_block, S)
+    k_block = min(k_block, S)
+    assert S % q_block == 0 and S % k_block == 0
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (B * H, S // q_block)
+    q_spec = pl.BlockSpec((1, 1, q_block, d),
+                          lambda bh, qi: (bh // H, bh % H, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, S, d),
+                           lambda bh, qi: (bh // H, (bh % H) // G, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, q_block, d),
+                            lambda bh, qi: (bh // H, bh % H, qi, 0))
+
+    kern = functools.partial(
+        _flash_kernel, q_block=q_block, k_block=k_block, seq_len=S,
+        scale=scale, causal=causal)
+
+    def kern3(q_ref, k_ref, v_ref, o_ref):
+        # squeeze the leading (1, 1) block dims
+        kern(q_ref.at[0, 0], k_ref.at[0, 0], v_ref.at[0, 0], o_ref.at[0, 0])
+
+    return pl.pallas_call(
+        kern3, grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (validation) and False on TPU
+(real kernel lowering) — the call sites never need to care.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .rglru_scan import rglru_scan as _rglru
+from .tile_relayout import tile_relayout as _relayout
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def tile_relayout(x, perm, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _relayout(x, tuple(perm), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash(q, k, v, causal=causal, **kw)
+
+
+def rglru_scan(a, b, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _rglru(a, b, **kw)

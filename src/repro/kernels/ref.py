@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_relayout_ref(x: jax.Array, perm: tuple[int, ...]) -> jax.Array:
+    C = len(perm)
+    a = x.shape[0] // C
+    chunks = x.reshape(C, a, *x.shape[1:])
+    return chunks[jnp.asarray(perm)].reshape(x.shape)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,S,d); k/v: (B,KV,S,d)."""
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t, h_{-1} = 0; shapes (B, S, R)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,72 @@
+"""rglru_scan — chunked linear-recurrence scan (Pallas TPU kernel).
+
+h_t = a_t * h_{t-1} + b_t over the sequence, per (batch, channel) lane —
+the RG-LRU/Griffin recurrence.  XLA's associative_scan materializes
+log2(S) full-length intermediates in HBM; this kernel runs the recurrence
+sequentially over S *inside VMEM* per (batch, channel-block) tile: one HBM
+read of (a, b), one HBM write of h.  The channel dimension is the minor
+(lane) axis, 128-aligned for the VPU; sequence chunks bound VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(a_ref, b_ref, o_ref, *, seq_chunk, seq_len):
+    """Refs are (1, S, r_block) VMEM blocks; the recurrence runs over S in
+    seq_chunk pieces, each processed sequentially in registers."""
+    R = a_ref.shape[-1]
+
+    def chunk_body(c, carry):
+        h0, out = carry
+        lo = c * seq_chunk
+        a = jax.lax.dynamic_slice_in_dim(
+            a_ref[0], lo, seq_chunk, axis=0).astype(jnp.float32)
+        b = jax.lax.dynamic_slice_in_dim(
+            b_ref[0], lo, seq_chunk, axis=0).astype(jnp.float32)
+
+        def step(t, carry2):
+            h, buf = carry2
+            h = a[t] * h + b[t]
+            buf = jax.lax.dynamic_update_slice_in_dim(
+                buf, h[None], t, axis=0)
+            return h, buf
+
+        h, buf = jax.lax.fori_loop(
+            0, seq_chunk, step,
+            (h0, jnp.zeros((seq_chunk, R), jnp.float32)))
+        out = jax.lax.dynamic_update_slice_in_dim(out, buf, lo, axis=0)
+        return h, out
+
+    h0 = jnp.zeros((R,), jnp.float32)
+    out0 = jnp.zeros((seq_len, R), jnp.float32)
+    _, out = jax.lax.fori_loop(0, seq_len // seq_chunk, chunk_body,
+                               (h0, out0))
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("r_block", "seq_chunk",
+                                             "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, *, r_block: int = 128,
+               seq_chunk: int = 256, interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, R) -> h: (B, S, R) with h_t = a_t*h_{t-1} + b_t."""
+    B, S, R = a.shape
+    r_block = min(r_block, R)
+    seq_chunk = min(seq_chunk, S)
+    assert R % r_block == 0 and S % seq_chunk == 0
+    grid = (B, R // r_block)
+
+    spec = pl.BlockSpec((1, S, r_block), lambda i, j: (i, 0, j))
+    kern = functools.partial(_scan_kernel, seq_chunk=seq_chunk, seq_len=S)
+
+    return pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)

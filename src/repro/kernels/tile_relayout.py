@@ -1,0 +1,57 @@
+"""tile_relayout — fused local chunk permutation (Pallas TPU kernel).
+
+The paper's §8 P4 analysis shows XLA exploiting *local* reshape/transposes
+around collectives; our physical plans likewise produce buffers that are
+concatenations of tiles whose final device-local order may differ from the
+order a collective produced (group-order vs target-order).  XLA emits a
+copy chain (transpose+reshape) for this; on TPU we fuse it into ONE pass
+over VMEM blocks, with the chunk permutation delivered via *scalar
+prefetch* (SMEM) so the BlockSpec index map can route each output block to
+its source block — zero extra HBM round-trips, arbitrary permutations.
+
+Layout contract: x has shape (C * a, b) = C chunks of (a, b) stacked on
+dim 0; output chunk k = input chunk perm[k].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _relayout_kernel(perm_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("perm", "interpret", "block_b"))
+def tile_relayout(x: jax.Array, perm: tuple[int, ...], *,
+                  block_b: int = 512, interpret: bool = False) -> jax.Array:
+    """Permute C equal chunks along dim 0 of a 2-D array.
+
+    grid = (C, ceil(b / block_b)); each program copies one (a, block_b)
+    VMEM tile from input chunk perm[i] to output chunk i.
+    """
+    C = len(perm)
+    rows, b = x.shape
+    assert rows % C == 0, (rows, C)
+    a = rows // C
+    bb = min(block_b, b)
+    grid = (C, pl.cdiv(b, bb))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((a, bb), lambda i, j, perm_ref:
+                               (perm_ref[i], j))],
+        out_specs=pl.BlockSpec((a, bb), lambda i, j, perm_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _relayout_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(perm, jnp.int32), x)

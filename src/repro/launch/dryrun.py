@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * ``.lower(**ShapeDtypeStructs)`` + ``.compile()`` must succeed,
+  * ``memory_analysis()`` proves the cell fits,
+  * ``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo_1b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results_dir
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy: str | None = None, save_hlo: str | None = None,
+             remat: bool = True, layers: int | None = None,
+             unroll: bool = False, variant: str = ""):
+    import jax
+
+    from repro.configs.registry import SHAPES, applicable, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import shardings_for
+    from repro.launch.hlo_analysis import collective_bytes, count_ops
+
+    ok, reason = applicable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+
+    cfg = get_config(arch)
+    from repro.launch.steps import arch_policy
+    policy = policy or arch_policy(cfg)   # pin BEFORE any layer override
+    import dataclasses
+    seq_shard_cache = False
+    model_parallel = 16
+    for v in filter(None, variant.split("+")):
+        if v.startswith("attnchunk"):
+            cfg = dataclasses.replace(cfg, attn_chunk=int(v[len("attnchunk"):]))
+        elif v == "etp":
+            policy = "fsdp_etp"
+        elif v == "seqkv":
+            seq_shard_cache = True
+        elif v == "noremat":
+            remat = False
+        elif v == "moeconst":
+            from repro.models import mlp
+            mlp.set_moe_constraints(("data",), "model")
+        elif v.startswith("model"):
+            model_parallel = int(v[len("model"):])
+        else:
+            raise ValueError(f"unknown variant {v!r}")
+    if layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=layers)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                model_parallel=model_parallel)
+    t0 = time.time()
+    in_sh, out_sh, step, args = shardings_for(cfg, mesh, shape, policy,
+                                               unroll=unroll,
+                                               seq_shard_cache=seq_shard_cache)
+    if shape.kind == "train" and not remat:
+        from repro.launch.steps import build_train_step
+        step = build_train_step(cfg, remat=False, unroll=unroll)
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.devices.size
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "policy": policy,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes": coll,
+        "hlo_ops": count_ops(hlo),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "layers_override": layers,
+        "unrolled": unroll,
+        "variant": variant,
+        "n_layers": cfg.n_layers,
+        "pattern_len": len(cfg.pattern),
+        "pattern_repeats": cfg.pattern_repeats,
+        "remainder_len": len(cfg.remainder),
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+    if save_hlo:
+        Path(save_hlo).write_text(hlo)
+        result["hlo_path"] = save_hlo
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        from repro.configs.registry import all_cells
+        cells = list(all_cells())
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = f"{arch}.{shape}.{'multipod' if args.multi_pod else 'singlepod'}"
+        if args.policy:
+            tag += f".{args.policy}"
+        if args.no_remat:
+            tag += ".noremat"
+        if args.layers is not None:
+            tag += f".L{args.layers}"
+        if args.unroll:
+            tag += ".U"
+        if args.variant:
+            tag += f".V_{args.variant}"
+        out_path = outdir / f"{tag}.json"
+        if out_path.exists():
+            print(f"[dryrun] {tag}: cached", flush=True)
+            continue
+        print(f"[dryrun] {tag}: lowering...", flush=True)
+        try:
+            res = run_cell(arch, shape, args.multi_pod, args.policy,
+                           args.save_hlo, remat=not args.no_remat,
+                           layers=args.layers, unroll=args.unroll,
+                           variant=args.variant)
+        except Exception as e:  # record failures as results: they are bugs
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+        out_path.write_text(json.dumps(res, indent=2))
+        status = res.get("status")
+        extra = (f" compile={res.get('compile_s')}s"
+                 f" flops={res.get('flops', 0):.3g}" if status == "ok" else
+                 res.get("reason", res.get("error", ""))[:120])
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

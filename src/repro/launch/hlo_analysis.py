@@ -1,0 +1,57 @@
+"""HLO text analysis: collective operand bytes + op census for §Roofline.
+
+``cost_analysis()`` has no collective traffic, so we parse the compiled
+module: sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-collective-kind total output bytes (per device, since HLO shapes
+    in SPMD modules are per-partition).  Handles tuple-shaped results
+    (e.g. multi-operand all-to-all) and async -start/-done pairs."""
+    out: Counter = Counter()
+    count: Counter = Counter()
+    for m in _OP_RE.finditer(hlo):
+        lhs, kind = m.group(1), m.group(2)
+        nbytes = sum(shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(lhs))
+        out[kind] += nbytes
+        count[kind] += 1
+    return {"bytes": dict(out), "count": dict(count),
+            "total_bytes": int(sum(out.values()))}
+
+
+def count_ops(hlo: str) -> dict:
+    """Census of expensive op kinds (fusion/dot/collectives)."""
+    census: Counter = Counter()
+    for kind in ("fusion", "dot", "convolution", "custom-call",
+                 *_COLLECTIVES):
+        census[kind] = len(re.findall(rf"\s{kind}[.(\s]", hlo))
+    return dict(census)

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: (16, 16)        axes ("data", "model")   = 256 chips (TPU v5e pod)
+Multi-pod:  (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         model_parallel: int = 16):
+    """256 chips/pod; ``model_parallel`` re-splits the pod between the
+    data and model axes (head-alignment hillclimb: e.g. 8 for archs whose
+    head counts don't divide 16 — see EXPERIMENTS.md §Perf)."""
+    import jax
+    dp = 256 // model_parallel
+    shape = (2, dp, model_parallel) if multi_pod else (dp, model_parallel)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"))

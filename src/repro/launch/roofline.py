@@ -1,0 +1,186 @@
+"""§Roofline: three-term roofline per (arch × shape) from compiled dry-runs.
+
+    compute    = HLO_FLOPs / (chips × 197 TF/s)         [bf16 v5e]
+    memory     = HLO_bytes / (chips × 819 GB/s)
+    collective = collective_bytes / (chips × 50 GB/s)
+
+HLO metrics from ``compiled.cost_analysis()`` + HLO-text collective sums.
+Because XLA counts while-loop bodies ONCE (independent of trip count),
+the layer-scan contribution is reconstructed from two probe compiles with
+the layer loop UNROLLED (L = pattern_len and 2·pattern_len):
+    body  = m_unrolled(2p) − m_unrolled(p);   outer = m_unrolled(p) − body
+    corrected = outer + (repeats + remainder/pattern_len) · body
+(sLSTM's inner sequence scan is additionally corrected analytically —
+its recurrent matmul is invisible to HLO costing at any layer count.)
+
+Note on units: the compiled module is the per-partition SPMD program, so
+cost_analysis flops/bytes are already per-chip; no further division.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+from repro.core.costmodel import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.configs.registry import SHAPES, get_config
+
+HW = {"peak_flops": PEAK_FLOPS_BF16, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+def _metric(r, name):
+    if name == "collective":
+        return float(r["collective_bytes"]["total_bytes"])
+    return float(r[name])
+
+
+def _slstm_extra_flops(cfg, shape, n_dev) -> float:
+    """Per-device flops of sLSTM inner-scan recurrent matmuls (invisible
+    to HLO costing: while-in-while).  4 gates × block-diag R (H, hd, hd),
+    2 flops/MAC, per token."""
+    n_slstm = sum(1 for (sq, _) in (cfg.pattern * cfg.pattern_repeats +
+                                    cfg.remainder) if sq == "slstm")
+    if not n_slstm:
+        return 0.0
+    hd = cfg.d_model // cfg.n_heads
+    per_tok = 4 * cfg.n_heads * hd * hd * 2
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 3  # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 1
+    else:
+        tokens = shape.global_batch
+        mult = 1
+    return n_slstm * per_tok * tokens * mult / n_dev
+
+
+def corrected_metrics(cell: dict, probe1: dict, probe2: dict) -> dict:
+    p = cell["pattern_len"]
+    reps_eff = cell["pattern_repeats"] + cell["remainder_len"] / p
+    out = {}
+    for m in ("flops", "bytes_accessed", "collective"):
+        m1, m2 = _metric(probe1, m), _metric(probe2, m)
+        body = max(m2 - m1, 0.0)
+        outer = max(m1 - body, 0.0)
+        corrected = outer + reps_eff * body
+        out[m] = {"raw": _metric(cell, m), "body": body, "outer": outer,
+                  "corrected": corrected}
+    return out
+
+
+def model_flops(cfg, shape, n_dev) -> float:
+    """Task-spec MODEL_FLOPS: 6·N·D (train) / 2·N_active·D (inference),
+    per device."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n * tokens / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n * tokens / n_dev
+    return 2 * n * shape.global_batch / n_dev
+
+
+def analyze(dirpath="experiments/dryrun", mesh="singlepod") -> list[dict]:
+    rows = []
+    d = Path(dirpath)
+    for f in sorted(d.glob(f"*.{mesh}.json")):
+        cell = json.loads(f.read_text())
+        if cell.get("status") != "ok":
+            if cell.get("status") == "skipped":
+                rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                             "status": "skipped",
+                             "reason": cell.get("reason", "")})
+            continue
+        arch, shape_name = cell["arch"], cell["shape"]
+        p = cell["pattern_len"]
+        pol = cell["policy"]
+        p1 = d / f"{arch}.{shape_name}.{mesh}.{pol}.L{p}.U.json"
+        p2 = d / f"{arch}.{shape_name}.{mesh}.{pol}.L{2 * p}.U.json"
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        n_dev = cell["n_devices"]
+        if p1.exists() and p2.exists():
+            probe1 = json.loads(p1.read_text())
+            probe2 = json.loads(p2.read_text())
+            if probe1.get("status") == "ok" and probe2.get("status") == "ok":
+                mets = corrected_metrics(cell, probe1, probe2)
+            else:
+                mets = {m: {"raw": _metric(cell, m),
+                            "corrected": _metric(cell, m)}
+                        for m in ("flops", "bytes_accessed", "collective")}
+        else:
+            mets = {m: {"raw": _metric(cell, m),
+                        "corrected": _metric(cell, m)}
+                    for m in ("flops", "bytes_accessed", "collective")}
+        flops = mets["flops"]["corrected"] + _slstm_extra_flops(
+            cfg, shape, n_dev)
+        byts = mets["bytes_accessed"]["corrected"]
+        coll = mets["collective"]["corrected"]
+
+        t_comp = flops / HW["peak_flops"]
+        t_mem = byts / HW["hbm_bw"]
+        t_coll = coll / HW["ici_bw"]
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape, n_dev)
+        rows.append({
+            "arch": arch, "shape": shape_name, "status": "ok",
+            "policy": pol, "n_devices": n_dev,
+            "flops": flops, "bytes": byts, "collective_bytes": coll,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "bottleneck": dom,
+            # fraction of bf16 peak this step achieves when running at its
+            # limiting roofline term (an MFU upper bound for the config)
+            "roofline_fraction": (mf / HW["peak_flops"])
+                                 / max(max(terms.values()), 1e-30),
+            "model_flops": mf,
+            "useful_ratio": mf / max(flops, 1e-30),
+            "raw_flops": mets["flops"]["raw"],
+            "temp_bytes": cell.get("temp_size_in_bytes"),
+            "arg_bytes": cell.get("argument_size_in_bytes"),
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | policy | compute(s) | memory(s) | coll.(s) | "
+           "bottleneck | roofline | useful | temp/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        tb = r.get("temp_bytes")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {tb / 1e9:.1f}GB |" if tb else
+            f"| {r['arch']} | {r['shape']} | {r['policy']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| n/a |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    rows = analyze(args.dir)
+    Path(args.out).write_text(json.dumps(rows, indent=2))
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

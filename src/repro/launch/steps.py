@@ -1,0 +1,184 @@
+"""Step functions + abstract inputs for training / prefill / decode.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — consumed by the
+dry-run's .lower(); the same builders drive the real trainer/server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec, get_config
+from repro.models import decode_step, init_cache, init_params, loss_fn
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.sharding import policies
+
+
+def arch_policy(cfg: ModelConfig) -> str:
+    """Default parallelism policy per architecture size/family."""
+    if cfg.param_count() > 3e10:
+        return "fsdp"        # giants: FSDP(+EP over model)
+    return "tp"
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_state(abstract_params(cfg)))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len))
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int):
+    tokshape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 \
+        else (batch, seq)
+    out = {"tokens": jax.ShapeDtypeStruct(tokshape, jnp.int32),
+           "labels": jax.ShapeDtypeStruct(tokshape, jnp.int32)}
+    if cfg.frontend:
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def input_specs(arch_or_cfg, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for one (arch, shape) cell."""
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) \
+        else get_config(arch_or_cfg)
+    if shape.kind == "train":
+        return {"batch": batch_structs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": batch_structs(cfg, shape.global_batch, shape.seq_len)}
+    # decode: one new token against a cache of seq_len
+    tokshape = (shape.global_batch, 1, cfg.n_codebooks) \
+        if cfg.n_codebooks > 1 else (shape.global_batch, 1)
+    return {
+        "tokens": jax.ShapeDtypeStruct(tokshape, jnp.int32),
+        "cache": abstract_cache(cfg, shape.global_batch, shape.seq_len),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                     *, remat: bool = True, unroll: bool = False):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, remat=remat,
+                                   unroll=unroll)
+        params, opt_state, om = apply_updates(params, grads, opt_state,
+                                              opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, *, unroll: bool = False):
+    from repro.models import forward
+
+    def prefill_step(params, batch):
+        logits, _ = forward(params, batch, cfg, remat=False, unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def build_decode_fn(cfg: ModelConfig, *, unroll: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg, unroll=unroll)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for a mesh
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(cfg: ModelConfig, mesh, shape: ShapeSpec,
+                  policy: str | None = None, *, unroll: bool = False,
+                  seq_shard_cache: bool = False):
+    """Returns (in_shardings, out_shardings, step_fn, args) fully wired for
+    jit.lower on the given mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import data_axes_of, mesh_axis_sizes
+
+    policy = policy or arch_policy(cfg)
+    policies.set_axis_sizes(mesh_axis_sizes(mesh))
+    data_axes = data_axes_of(mesh)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    params = abstract_params(cfg)
+    pspecs = policies.param_specs(params, cfg, data_axes=data_axes,
+                                  policy=policy)
+    if shape.kind == "train":
+        opt = abstract_opt_state(cfg)
+        ospecs = policies.opt_state_specs(params, pspecs,
+                                          data_axes=data_axes)
+        bspecs = policies.batch_specs(cfg, data_axes)
+        step = build_train_step(cfg, unroll=unroll)
+        args = (params, opt, input_specs(cfg, shape)["batch"])
+        in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs),
+                 jax.tree.map(ns, bspecs))
+        out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs),
+                  None)
+        return in_sh, out_sh, step, args
+
+    sizes = mesh_axis_sizes(mesh)
+    vocab_ax = "model" if cfg.vocab % sizes.get("model", 1) == 0 else None
+    if shape.kind == "prefill":
+        bspecs = policies.batch_specs(cfg, data_axes)
+        bspecs = {k: v for k, v in bspecs.items() if k != "labels"}
+        step = build_prefill_step(cfg, unroll=unroll)
+        batch = {k: v for k, v in input_specs(cfg, shape)["batch"].items()
+                 if k != "labels"}
+        args = (params, batch)
+        in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, bspecs))
+        # logits: batch over data, vocab over model (when divisible)
+        d = data_axes if len(data_axes) > 1 else data_axes[0]
+        out_sh = ns(P(d, None, vocab_ax))
+        return in_sh, out_sh, step, args
+
+    # decode
+    spec_in = input_specs(cfg, shape)
+    cspecs = policies.cache_specs(spec_in["cache"], data_axes,
+                                  shape.global_batch,
+                                  seq_shard=seq_shard_cache)
+    step = build_decode_fn(cfg, unroll=unroll)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh_axis_sizes(mesh)[a]
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    tok_spec = P(d, None) if shape.global_batch % n_data == 0 else P(None, None)
+    if cfg.n_codebooks > 1:
+        tok_spec = P(*tok_spec, None)
+    args = (params, spec_in["cache"], spec_in["tokens"], spec_in["pos"])
+    in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, cspecs),
+             ns(tok_spec), ns(P()))
+    logits_spec = P(tok_spec[0], None, vocab_ax)
+    out_sh = (ns(logits_spec), jax.tree.map(ns, cspecs))
+    return in_sh, out_sh, step, args

@@ -1,0 +1,54 @@
+"""Training entry point.
+
+  python -m repro.launch.train --arch qwen2_0_5b [--reduced] --steps 50
+
+Full configs are intended for the TPU pods the dry-run proves out;
+``--reduced`` runs the same code path at smoke scale on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    def report(step, m):
+        if step % 5 == 0:
+            print(f"[{cfg.name}] step {step:4d} loss {float(m['loss']):.4f} "
+                  f"({m['step_time'] * 1e3:.0f} ms)", flush=True)
+
+    res = train(cfg,
+                TrainConfig(steps=args.steps, microbatches=args.microbatches,
+                            ckpt_dir=args.ckpt,
+                            grad_compression=args.compress),
+                DataConfig(global_batch=args.batch, seq_len=args.seq),
+                AdamWConfig(lr=args.lr, warmup_steps=5,
+                            total_steps=args.steps),
+                on_metrics=report)
+    print(f"final loss {res.losses[-1]:.4f} "
+          f"(from {res.losses[0]:.4f}); stragglers: {len(res.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

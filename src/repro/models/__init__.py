@@ -1,0 +1,5 @@
+from .config import MLAConfig, ModelConfig, MoEConfig
+from .lm import (decode_step, forward, init_cache, init_params, loss_fn)
+
+__all__ = ["MLAConfig", "ModelConfig", "MoEConfig", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn"]

@@ -1,0 +1,236 @@
+"""Attention sequence mixers: GQA (full / sliding-window / local) and MLA.
+
+Training path is a dense causal attention (optionally windowed); decode
+path consumes a KV cache.  MLA (MiniCPM3/DeepSeek-style) caches the
+*compressed latent* — its whole point — so its decode cache is
+(B, S, kv_lora_rank + qk_rope_head_dim) regardless of head count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, causal_mask, dense, dense_init
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], D, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], D, KV * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], D, KV * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype=dtype),
+    }
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,hd) k/v: (B,T,KV,hd); GQA head repetition via reshape."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)
+
+
+def gqa_apply(params, x, cfg: ModelConfig, *, window=None, positions=None):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = dense(params["wq"], x).reshape(B, S, H, hd)
+    k = dense(params["wk"], x).reshape(B, S, KV, hd)
+    v = dense(params["wv"], x).reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.window if window is None else window
+    if cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        out = _sdpa_chunked(q, k, v, w, cfg.attn_chunk)
+    else:
+        mask = causal_mask(S, S, window=w)
+        out = _sdpa(q, k, v, mask)
+    return dense(params["wo"], out.reshape(B, S, H * hd))
+
+
+def _sdpa_chunked(q, k, v, window: int, chunk: int):
+    """Query-block-chunked attention: the (S, S) score tensor never
+    materializes — peak temp is (chunk, S) per head group.  This is the
+    HLO-level equivalent of the Pallas flash kernel (kernels/
+    flash_attention.py), used where Pallas cannot lower (dry-run on CPU);
+    on TPU the kernel replaces it 1:1."""
+    B, S, H, hd = q.shape
+    n_chunks = S // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, hd)
+
+    def body(_, args):
+        qi, i = args
+        q_off = i * chunk
+        mask = causal_mask(chunk, S, q_offset=q_off, window=window)
+        o = _sdpa(qi, k, v, mask)
+        return None, o
+
+    _, out = jax.lax.scan(
+        body, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(n_chunks)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def gqa_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    L = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, L, KV, hd), dtype),
+        "v": jnp.zeros((batch, L, KV, hd), dtype),
+    }
+
+
+def _row_update(cache, new, slots):
+    """Per-row cache write: cache (B,L,...), new (B,1,...), slots (B,)."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(
+            c, n, (s,) + (0,) * (c.ndim - 1)))(cache, new, slots)
+
+
+def _as_vec(pos, B):
+    pos = jnp.asarray(pos)
+    return jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+
+
+def gqa_decode(params, cache, x, pos, cfg: ModelConfig, active=None):
+    """One-token decode.  x: (B, 1, D); pos: scalar or (B,) per-slot
+    positions (continuous batching).
+
+    With a sliding window the cache is a ring buffer of size ``window``
+    (this is what makes `long_500k` feasible for SWA archs)."""
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = cache["k"].shape[1]
+    posv = _as_vec(pos, B)                               # (B,)
+    positions = posv[:, None]
+    q = dense(params["wq"], x).reshape(B, 1, H, hd)
+    k = dense(params["wk"], x).reshape(B, 1, KV, hd)
+    v = dense(params["wv"], x).reshape(B, 1, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    slot = posv % L if cfg.window else posv
+    ck = _row_update(cache["k"], k, slot)
+    cv = _row_update(cache["v"], v, slot)
+    # valid = slots holding positions in (pos-L, pos], per row
+    idx = jnp.arange(L)[None, :]
+    if cfg.window:
+        age = (slot[:, None] - idx) % L
+        valid = age < jnp.minimum(posv[:, None] + 1, L)
+    else:
+        valid = idx <= posv[:, None]
+    out = _sdpa_rowmask(q, ck, cv, valid)
+    y = dense(params["wo"], out.reshape(B, 1, H * hd))
+    return {"k": ck, "v": cv}, y
+
+
+def _sdpa_rowmask(q, k, v, valid):
+    """_sdpa with a per-row (B, T) key-validity mask."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qq = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qq, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], D, m.q_lora_rank, dtype=dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * qk, dtype=dtype),
+        "wkv_a": dense_init(ks[2], D, m.kv_lora_rank + m.qk_rope_head_dim,
+                            dtype=dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim),
+                            dtype=dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, D, dtype=dtype),
+    }
+
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = dense(params["wq_b"], dense(params["wq_a"], x))
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = dense(params["wkv_a"], x)                       # latent + k_rope
+    latent, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, latent, k_rope
+
+
+def _mla_attend(params, q_nope, q_rope, latent, k_rope, mask, cfg):
+    m = cfg.mla
+    B, S = q_nope.shape[:2]
+    T = latent.shape[1]
+    H = cfg.n_heads
+    kvb = dense(params["wkv_b"], latent).reshape(
+        B, T, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btxd->bhst", q_rope,
+                           k_rope)).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)   # mask broadcastable (B,H,S,T)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", p, v)
+    return dense(params["wo"], out.reshape(B, S, H * m.v_head_dim))
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, positions=None, **_):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, positions, cfg)
+    mask = causal_mask(S, S)[None, None]
+    return _mla_attend(params, q_nope, q_rope, latent, k_rope, mask, cfg)
+
+
+def mla_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    m = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, cache, x, pos, cfg: ModelConfig, active=None):
+    B = x.shape[0]
+    posv = _as_vec(pos, B)
+    positions = posv[:, None]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, positions, cfg)
+    cl = _row_update(cache["latent"], latent, posv)
+    cr = _row_update(cache["k_rope"], k_rope, posv)
+    T = cl.shape[1]
+    valid = jnp.arange(T)[None, :] <= posv[:, None]      # (B, T)
+    y = _mla_attend(params, q_nope, q_rope, cl, cr,
+                    valid[:, None, None, :], cfg)
+    return {"latent": cl, "k_rope": cr}, y

@@ -1,0 +1,153 @@
+"""Model configuration for all assigned architectures.
+
+A single declarative config drives block construction; heterogeneous
+layer stacks (hybrid/ssm archs) are expressed as a repeating *pattern* of
+(sequence-mixer, channel-mixer) block kinds plus an optional remainder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+SeqMixer = Literal["attn", "swa", "mla", "local", "rglru", "mlstm", "slstm"]
+ChanMixer = Literal["swiglu", "gelu", "moe", "moe+dense", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    group_size: int = 1024        # GShard-style dispatch groups
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[tuple[str, str], ...] = (("attn", "swiglu"),)
+    head_dim: int | None = None       # default d_model // n_heads
+    window: int = 0                   # sliding/local attention window (0=full)
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"             # rmsnorm | layernorm_np (non-parametric)
+    rope_theta: float = 10_000.0
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    d_rnn: int = 0                    # RG-LRU width
+    conv_width: int = 4               # temporal conv for RG-LRU
+    frontend: str | None = None       # "vision" | "audio" (stub embeddings)
+    frontend_len: int = 0             # prefix positions fed by the frontend
+    n_codebooks: int = 1              # audio: EnCodec codebooks
+    dtype: str = "float32"
+    # Sub-quadratic? (drives the long_500k skip decision)
+    subquadratic: bool = False
+    # Perf knobs (hillclimb; see EXPERIMENTS.md §Perf)
+    attn_chunk: int = 0          # >0: scan attention over query blocks
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def remainder(self) -> tuple[tuple[str, str], ...]:
+        rem = self.n_layers - self.pattern_repeats * len(self.pattern)
+        return self.pattern[:rem]
+
+    def reduced(self, n_layers: int | None = None) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        scale = max(self.d_model // 64, 1)
+        small_heads = max(self.n_heads // max(self.n_heads // 2, 1), 2)
+        kv = max(1, self.n_kv_heads * small_heads // self.n_heads)
+        moe = None
+        if self.moe:
+            moe = dataclasses.replace(self.moe, n_experts=4, group_size=16,
+                                       capacity_factor=4.0)
+        mla = None
+        if self.mla:
+            mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                            qk_nope_head_dim=8, qk_rope_head_dim=8,
+                            v_head_dim=8)
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers or max(2 * len(self.pattern), len(self.pattern)),
+            d_model=self.d_model // scale,
+            n_heads=small_heads,
+            n_kv_heads=kv,
+            head_dim=None,
+            d_ff=max(self.d_ff // scale, 8) if self.d_ff else 0,
+            vocab=256,
+            window=min(self.window, 8) if self.window else 0,
+            mla=mla, moe=moe,
+            d_rnn=self.d_rnn // scale if self.d_rnn else 0,
+            frontend_len=4 if self.frontend else 0,
+            dtype="float32",
+        )
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        hd = self.hd
+        total = V * D * (1 if self.tie_embeddings else 2)
+        for (seq, chan) in (self.pattern * self.pattern_repeats +
+                            self.remainder):
+            if seq in ("attn", "swa", "local"):
+                kvh = 1 if seq == "local" and self.n_kv_heads == 1 else self.n_kv_heads
+                total += D * hd * self.n_heads + 2 * D * hd * kvh \
+                    + self.n_heads * hd * D
+            elif seq == "mla":
+                m = self.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                total += (D * m.q_lora_rank
+                          + m.q_lora_rank * self.n_heads * qk
+                          + D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                          + m.kv_lora_rank * self.n_heads
+                          * (m.qk_nope_head_dim + m.v_head_dim)
+                          + self.n_heads * m.v_head_dim * D)
+            elif seq == "rglru":
+                R = self.d_rnn or D
+                total += 2 * D * R + R * self.conv_width + 2 * R + R * D
+            elif seq in ("mlstm", "slstm"):
+                total += 2 * D * 2 * D + 4 * D * D // 4  # up/down + cell (approx)
+            if chan == "swiglu":
+                total += 3 * D * F
+            elif chan == "gelu":
+                total += 2 * D * F
+            elif chan in ("moe", "moe+dense"):
+                total += self.moe.n_experts * 3 * D * F + D * self.moe.n_experts
+                if chan == "moe+dense":
+                    total += 3 * D * F
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if not self.moe:
+            return self.param_count()
+        D, F = self.d_model, self.d_ff
+        dense = self.param_count()
+        n_moe = sum(1 for (_, c) in (self.pattern * self.pattern_repeats
+                                     + self.remainder)
+                    if c in ("moe", "moe+dense"))
+        inactive = n_moe * (self.moe.n_experts - self.moe.top_k) * 3 * D * F
+        return dense - inactive

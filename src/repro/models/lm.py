@@ -1,0 +1,271 @@
+"""Decoder LM assembly: heterogeneous block stacks, scanned layers,
+training forward/loss and cached decode.
+
+Layer stacking: the config's block *pattern* repeats ``pattern_repeats``
+times; the repeated params are stacked with a leading repeat dimension and
+consumed by ``lax.scan`` (compile-once-per-pattern — essential for the
+62-layer dry-runs), with any remainder layers unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp, recurrent
+from .config import ModelConfig
+from .layers import dense, dense_init, norm_apply, norm_init
+
+SEQ_INIT = {"attn": attention.gqa_init, "swa": attention.gqa_init,
+            "local": attention.gqa_init, "mla": attention.mla_init,
+            "rglru": recurrent.rglru_init, "mlstm": recurrent.mlstm_init,
+            "slstm": recurrent.slstm_init}
+SEQ_APPLY = {"attn": attention.gqa_apply, "swa": attention.gqa_apply,
+             "local": attention.gqa_apply, "mla": attention.mla_apply,
+             "rglru": recurrent.rglru_apply, "mlstm": recurrent.mlstm_apply,
+             "slstm": recurrent.slstm_apply}
+SEQ_CACHE = {"attn": attention.gqa_cache_init, "swa": attention.gqa_cache_init,
+             "local": attention.gqa_cache_init,
+             "mla": attention.mla_cache_init,
+             "rglru": recurrent.rglru_cache_init,
+             "mlstm": recurrent.mlstm_cache_init,
+             "slstm": recurrent.slstm_cache_init}
+SEQ_DECODE = {"attn": attention.gqa_decode, "swa": attention.gqa_decode,
+              "local": attention.gqa_decode, "mla": attention.mla_decode,
+              "rglru": recurrent.rglru_decode,
+              "mlstm": recurrent.mlstm_decode,
+              "slstm": recurrent.slstm_decode}
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, seq_kind: str, chan_kind: str, cfg: ModelConfig, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "seq": SEQ_INIT[seq_kind](k1, cfg, dt),
+    }
+    if chan_kind != "none":
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model)
+    if chan_kind == "swiglu":
+        p["chan"] = mlp.swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)
+    elif chan_kind == "gelu":
+        p["chan"] = mlp.gelu_init(k2, cfg.d_model, cfg.d_ff, dt)
+    elif chan_kind == "moe":
+        p["chan"] = mlp.moe_init(k2, cfg, dt)
+    elif chan_kind == "moe+dense":
+        p["chan"] = mlp.moe_init(k2, cfg, dt)
+        p["chan_dense"] = mlp.swiglu_init(k3, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    n_pat = len(cfg.pattern)
+    reps = cfg.pattern_repeats
+    keys = jax.random.split(key, reps * n_pat + len(cfg.remainder) + 3)
+    ki = iter(range(len(keys)))
+
+    stacked = []
+    for (seq, chan) in cfg.pattern:
+        per_rep = [_block_init(keys[next(ki)], seq, chan, cfg, dt)
+                   for _ in range(reps)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                       if reps > 1 else
+                       jax.tree.map(lambda x: x[None], per_rep[0]))
+    remainder = [_block_init(keys[next(ki)], seq, chan, cfg, dt)
+                 for (seq, chan) in cfg.remainder]
+
+    params = {
+        "embed": dense_init(keys[next(ki)], cfg.vocab, cfg.d_model,
+                            scale=0.02, dtype=dt),
+        "blocks": tuple(stacked),
+        "remainder": remainder,
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[next(ki)], cfg.d_model,
+                                       cfg.vocab, scale=0.02, dtype=dt)
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(keys[next(ki)], cfg.d_model,
+                                             cfg.d_model, dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(p, x, seq_kind, chan_kind, cfg: ModelConfig):
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(cfg.norm, p.get("norm1"), x)
+    window = cfg.window if seq_kind in ("swa", "local") else 0
+    x = x + SEQ_APPLY[seq_kind](p["seq"], h, cfg, window=window)
+    if chan_kind == "none":
+        return x, aux
+    h = norm_apply(cfg.norm, p.get("norm2"), x)
+    if chan_kind in ("moe", "moe+dense"):
+        y, aux = mlp.moe_apply(p["chan"], h, cfg)
+        if chan_kind == "moe+dense":
+            y = y + mlp.swiglu_apply(p["chan_dense"], h)
+    elif chan_kind == "swiglu":
+        y = mlp.swiglu_apply(p["chan"], h)
+    else:
+        y = mlp.gelu_apply(p["chan"], h)
+    return x + y, aux
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """tokens (B,S) [+ frontend embeds (B,F,D)] -> (B,S,D)."""
+    tokens = batch["tokens"]
+    if cfg.n_codebooks > 1:
+        x = params["embed"]["w"][tokens].sum(axis=2)   # (B,S,cb) EnCodec stub
+    else:
+        x = params["embed"]["w"][tokens]
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = dense(params["frontend_proj"],
+                   batch["frontend_embeds"].astype(x.dtype))
+        x = jnp.concatenate([fe, x[:, cfg.frontend_len:]], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            unroll: bool = False):
+    """Full forward -> (logits, aux_loss).  ``unroll=True`` replaces the
+    layer scan with a Python loop (roofline probes: XLA cost analysis
+    counts while-loop bodies once, so loop-free modules give true totals).
+    """
+    x = embed_inputs(params, batch, cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def super_step(carry, layer_ps):
+        x, aux = carry
+        for pos, (seq, chan) in enumerate(cfg.pattern):
+            x, a = _block_apply(layer_ps[pos], x, seq, chan, cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(super_step) if remat else super_step
+    if unroll:
+        carry = (x, aux0)
+        for r in range(cfg.pattern_repeats):
+            layer_ps = jax.tree.map(lambda v: v[r], params["blocks"])
+            carry, _ = body(carry, layer_ps)
+        x, aux_total = carry
+    else:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+
+    for p, (seq, chan) in zip(params["remainder"], cfg.remainder):
+        p = jax.tree.map(lambda v: v, p)
+        x, a = _block_apply(p, x, seq, chan, cfg)
+        aux_total = aux_total + a
+
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits, aux_total
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            unroll: bool = False):
+    logits, aux = forward(params, batch, cfg, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:
+        labels = labels[..., 0]      # audio stub: predict first codebook
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token with caches)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    caches = []
+    for (seq, chan) in cfg.pattern:
+        per_rep = [SEQ_CACHE[seq](cfg, batch, max_len, dt)
+                   for _ in range(cfg.pattern_repeats)]
+        caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                      if cfg.pattern_repeats > 1
+                      else jax.tree.map(lambda x: x[None], per_rep[0]))
+    rem = [SEQ_CACHE[seq](cfg, batch, max_len, dt)
+           for (seq, chan) in cfg.remainder]
+    return {"blocks": tuple(caches), "remainder": rem}
+
+
+def _decode_block(p, c, x, pos, seq, chan, cfg, active=None):
+    h = norm_apply(cfg.norm, p.get("norm1"), x)
+    c2, y = SEQ_DECODE[seq](p["seq"], c, h, pos, cfg, active=active)
+    x = x + y
+    if chan != "none":
+        h = norm_apply(cfg.norm, p.get("norm2"), x)
+        if chan in ("moe", "moe+dense"):
+            y, _ = mlp.moe_apply(p["chan"], h, cfg, no_drop=True)
+            if chan == "moe+dense":
+                y = y + mlp.swiglu_apply(p["chan_dense"], h)
+        elif chan == "swiglu":
+            y = mlp.swiglu_apply(p["chan"], h)
+        else:
+            y = mlp.gelu_apply(p["chan"], h)
+        x = x + y
+    return c2, x
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, active=None,
+                unroll: bool = False):
+    """tokens: (B, 1) (or (B,1,n_codebooks)); pos: scalar or (B,) int32
+    positions; active: optional (B,) bool row mask (continuous batching —
+    inactive rows' recurrent states are frozen).  Returns (logits, cache)."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+
+    def super_step(x, pcs):
+        ps, cs = pcs
+        ncs = []
+        for posi, (seq, chan) in enumerate(cfg.pattern):
+            c2, x = _decode_block(ps[posi], cs[posi], x, pos, seq, chan, cfg,
+                                  active=active)
+            ncs.append(c2)
+        return x, tuple(ncs)
+
+    if unroll:
+        ncs_all = []
+        for r in range(cfg.pattern_repeats):
+            pcs = jax.tree.map(lambda v: v[r],
+                               (params["blocks"], cache["blocks"]))
+            x, ncs = super_step(x, pcs)
+            ncs_all.append(ncs)
+        new_caches = jax.tree.map(lambda *vs: jnp.stack(vs), *ncs_all)
+    else:
+        x, new_caches = jax.lax.scan(super_step, x,
+                                     (params["blocks"], cache["blocks"]))
+
+    new_rem = []
+    for p, c, (seq, chan) in zip(params["remainder"], cache["remainder"],
+                                 cfg.remainder):
+        c2, x = _decode_block(p, c, x, pos, seq, chan, cfg, active=active)
+        new_rem.append(c2)
+
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w"].T
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits, {"blocks": new_caches, "remainder": new_rem}

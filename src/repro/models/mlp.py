@@ -1,0 +1,140 @@
+"""Channel mixers: SwiGLU / GeLU MLPs and GShard-style top-k MoE.
+
+The MoE uses grouped, capacity-bounded one-hot dispatch (GShard/GSPMD):
+expert weights carry a leading expert dimension that sharding policies map
+to the model axis (expert parallelism); the dispatch/combine einsums then
+lower to the alltoall patterns whose cost model this paper formalizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init
+
+# Optional GSPMD constraints for the expert computation, set by the launch
+# layer (see sharding.policies.set_moe_constraints): (token_axes, expert_ax).
+_MOE_CONSTRAINTS: dict = {}
+
+
+def set_moe_constraints(token_axes=None, expert_axis=None):
+    _MOE_CONSTRAINTS.clear()
+    if token_axes or expert_axis:
+        _MOE_CONSTRAINTS.update(tokens=token_axes, experts=expert_axis)
+
+
+def _constrain(x, spec_entries):
+    if not _MOE_CONSTRAINTS:
+        return x
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec_entries))
+    except Exception:
+        return x
+
+
+def swiglu_init(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    return {"wi": dense_init(ks[0], d, f, dtype=dtype),
+            "wg": dense_init(ks[1], d, f, dtype=dtype),
+            "wo": dense_init(ks[2], f, d, dtype=dtype)}
+
+
+def swiglu_apply(params, x):
+    return dense(params["wo"],
+                 jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x))
+
+
+def gelu_init(key, d, f, dtype):
+    ks = jax.random.split(key, 2)
+    return {"wi": dense_init(ks[0], d, f, dtype=dtype),
+            "wo": dense_init(ks[1], f, d, dtype=dtype)}
+
+
+def gelu_apply(params, x):
+    return dense(params["wo"], jax.nn.gelu(dense(params["wi"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    D, F, E = cfg.d_model, cfg.d_ff, m.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(D)
+    return {
+        "router": dense_init(ks[0], D, E, dtype=jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, D, F)) * scale).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, D, F)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, F, D)) * (1.0 / jnp.sqrt(F))
+               ).astype(dtype),
+    }
+
+
+def moe_apply(params, x, cfg: ModelConfig, *, no_drop: bool = False):
+    """x: (B, S, D) -> (B, S, D), plus router aux loss.
+
+    Grouped dispatch: tokens are reshaped to (G, g) groups; each group
+    dispatches to per-expert capacity buffers with one-hot matmuls.
+    ``no_drop=True`` (decode) sizes capacity so no token is ever dropped.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    tokens = x.reshape(-1, D)
+    T = tokens.shape[0]
+    g = min(m.group_size, T)
+    G = T // g
+    tokens = tokens[: G * g].reshape(G, g, D)
+
+    logits = (tokens.astype(jnp.float32) @ params["router"]["w"])  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                  # (G,g,K)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = g if no_drop else max(int(K * g * m.capacity_factor / E), 1)
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)          # (G,g,K,E)
+    flat = onehot.reshape(G, g * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - 1                   # (G,gK,E)
+    pos = (pos_in_expert.reshape(G, g, K, E) * onehot).sum(-1)     # (G,g,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # dispatch/combine one-hot tensors (G, g, K, E, C)
+    disp_k = (jax.nn.one_hot(gate_idx, E, dtype=tokens.dtype)[..., None]
+              * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                               dtype=tokens.dtype)[..., None, :C])
+    disp = disp_k.sum(2)                                           # (G,g,E,C)
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, tokens)         # (G,E,C,D)
+    tok_ax = _MOE_CONSTRAINTS.get("tokens")
+    exp_ax = _MOE_CONSTRAINTS.get("experts")
+    # Pin the expert buffers to (tokens over data, experts over model):
+    # every device computes its expert shard for its token shard with NO
+    # weight gathering and NO buffer gathering (EP done right).
+    expert_in = _constrain(expert_in, (tok_ax, exp_ax, None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"])
+    hi = jnp.einsum("gecd,edf->gecf", expert_in, params["wi"])
+    h = _constrain(jax.nn.silu(h) * hi, (tok_ax, exp_ax, None, None))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"])     # (G,E,C,D)
+    expert_out = _constrain(expert_out, (tok_ax, exp_ax, None, None))
+
+    comb = (disp_k * gate_vals.astype(tokens.dtype)[..., None, None]).sum(2)
+    out = jnp.einsum("gtec,gecd->gtd", comb, expert_out)
+    out = out.reshape(G * g, D)
+    if G * g < T:
+        out = jnp.concatenate(
+            [out, jnp.zeros((T - G * g, D), out.dtype)], axis=0)
+    out = out.reshape(B, S, D)
+
+    # load-balancing auxiliary loss (Switch/GShard style)
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(gate_idx[..., 0], E).mean(axis=(0, 1))
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,272 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin) and xLSTM.
+
+RG-LRU:  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+  with a_t = exp(-c · softplus(Λ) · r_t) — a *linear* recurrence in h, so
+  training uses jax.lax.associative_scan (log-time); decode is O(1)/token,
+  which is what makes the long_500k shape feasible.
+
+mLSTM: matrix-memory LSTM (xLSTM).  Training uses the parallel (quadratic)
+  form with log-domain stabilization; decode updates (C, n, m) per token.
+sLSTM: scalar-memory LSTM with recurrent gate connections — inherently
+  sequential (lax.scan), as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import causal_mask, dense, dense_init
+
+# ---------------------------------------------------------------------------
+# RG-LRU + temporal conv (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    R = cfg.d_rnn or D
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], D, R, dtype=dtype),
+        "wy": dense_init(ks[1], D, R, dtype=dtype),      # output gate branch
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, R)) * 0.1
+                 ).astype(dtype),
+        "w_input_gate": dense_init(ks[3], R, R, scale=0.01, dtype=dtype),
+        "w_rec_gate": dense_init(ks[4], R, R, scale=0.01, dtype=dtype),
+        # Λ init so that a^c spans ~(0.9, 0.999)
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.random.RandomState(0)
+                                    .uniform(0.9, 0.999, R) ** (1 / _C_RGLRU)))),
+            dtype=jnp.float32),
+        "wo": dense_init(ks[5], R, D, dtype=dtype),
+    }
+
+
+def _conv1d(x, w):
+    """Causal depthwise temporal conv; x: (B,S,R), w: (W,R)."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pads[:, i: i + x.shape[1]] * w[i]
+    return out
+
+
+def _rglru_coeffs(params, xr):
+    r = jax.nn.sigmoid(dense(params["w_rec_gate"], xr).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["w_input_gate"], xr).astype(jnp.float32))
+    log_a = -_C_RGLRU * r * jax.nn.softplus(params["lam"])  # (B,S,R) fp32
+    a = jnp.exp(log_a)
+    gated = (xr.astype(jnp.float32) * i) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gated
+
+
+def rglru_apply(params, x, cfg: ModelConfig, **_):
+    """Training path: associative scan over the sequence."""
+    B, S, D = x.shape
+    xr = dense(params["wx"], x)
+    xr = _conv1d(xr, params["conv"])
+    a, gated = _rglru_coeffs(params, xr)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype)
+    y = h * jax.nn.gelu(dense(params["wy"], x))
+    return dense(params["wo"], y)
+
+
+def rglru_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    R = cfg.d_rnn or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, R), dtype),
+    }
+
+
+def _sel(active, new, old):
+    if active is None:
+        return new
+    import jax.numpy as _jnp
+    m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return _jnp.where(m, new, old)
+
+
+def rglru_decode(params, cache, x, pos, cfg: ModelConfig, active=None):
+    B, _, D = x.shape
+    xr = dense(params["wx"], x)                       # (B,1,R)
+    hist = jnp.concatenate([cache["conv"], xr], axis=1)
+    xr_c = _conv1d(hist, params["conv"])[:, -1:, :]
+    a, gated = _rglru_coeffs(params, xr_c)
+    h = _sel(active, a[:, 0] * cache["h"] + gated[:, 0], cache["h"])
+    conv = _sel(active, hist[:, 1:], cache["conv"])
+    y = h[:, None].astype(x.dtype) * jax.nn.gelu(dense(params["wy"], x))
+    out = dense(params["wo"], y)
+    return {"h": h, "conv": conv}, out
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (parallel training form, recurrent decode form)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], D, D, dtype=dtype),
+        "wk": dense_init(ks[1], D, D, dtype=dtype),
+        "wv": dense_init(ks[2], D, D, dtype=dtype),
+        "wi": dense_init(ks[3], D, H, scale=0.01, dtype=dtype),   # input gate
+        "wf": dense_init(ks[4], D, H, scale=0.01, dtype=dtype),   # forget gate
+        "wg": dense_init(ks[5], D, D, dtype=dtype),               # output gate
+        "wo": dense_init(ks[6], D, D, dtype=dtype),
+    }
+
+
+def _mlstm_qkv(params, x, cfg):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q = dense(params["wq"], x).reshape(B, S, H, hd)
+    k = dense(params["wk"], x).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = dense(params["wv"], x).reshape(B, S, H, hd)
+    logi = dense(params["wi"], x).astype(jnp.float32)             # (B,S,H)
+    logf = jax.nn.log_sigmoid(
+        dense(params["wf"], x).astype(jnp.float32))               # (B,S,H)
+    return q, k, v, logi, logf
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, **_):
+    """Parallel form with log-domain stabilization (xLSTM eq. 19-27)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q, k, v, logi, logf = _mlstm_qkv(params, x, cfg)
+    F = jnp.cumsum(logf, axis=1)                                  # (B,S,H)
+    # log decay matrix: D[s,t] = F_s - F_t + i_t  (t <= s)
+    logD = (F[:, :, None] - F[:, None, :] + logi[:, None, :, :])
+    mask = causal_mask(S, S)
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)                      # stabilizer
+    m = jnp.maximum(m, -1e30)
+    Dmat = jnp.exp(logD - m)                                      # (B,S,S,H)
+    scores = jnp.einsum("bshd,bthd->bsth", q, k).astype(jnp.float32) * Dmat
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=2)),
+                       jnp.exp(-m[:, :, 0]))                      # (B,S,H)
+    out = jnp.einsum("bsth,bthd->bshd", (scores / norm[:, :, None]
+                                         ).astype(v.dtype), v)
+    out = out.reshape(B, S, D)
+    return dense(params["wo"], out * jax.nn.silu(dense(params["wg"], x)))
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, cache, x, pos, cfg: ModelConfig, active=None):
+    B, _, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q, k, v, logi, logf = _mlstm_qkv(params, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                           # (B,H,hd)
+    logi, logf = logi[:, 0], logf[:, 0]                           # (B,H)
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    f = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    i = jnp.exp(logi - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = f[..., None] * cache["C"] + i[..., None] * (
+        vf[..., :, None] * kf[..., None, :])                      # (B,H,hd,hd)
+    n = f * cache["n"] + i * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    out = (num / den).reshape(B, 1, D).astype(x.dtype)
+    y = dense(params["wo"], out * jax.nn.silu(dense(params["wg"], x)))
+    new = {"C": _sel(active, C, cache["C"]), "n": _sel(active, n, cache["n"]),
+           "m": _sel(active, m_new, cache["m"])}
+    return new, y
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scan; block-diagonal recurrent weights per head)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 3)
+    wx = dense_init(ks[0], D, 4 * D, dtype=dtype)       # z,i,f,o pre-acts
+    r = (jax.random.normal(ks[1], (4, H, hd, hd)) / np.sqrt(hd)).astype(dtype)
+    return {"wx": wx, "r": r,
+            "wo": dense_init(ks[2], D, D, dtype=dtype)}
+
+
+def _slstm_scan(params, pre, h0, c0, n0, m0, cfg):
+    """pre: (B,S,4,H,hd) pre-activations; returns h over time + final state."""
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, xt):
+        h, c, n, m = carry                              # (B,H,hd) fp32
+        rec = jnp.einsum("bhd,ghde->bghe", h, r)        # (B,4,H,hd)
+        zt, it, ft, ot = [xt[:, g] + rec[:, g] for g in range(4)]
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        c_new = f * c + i * jnp.tanh(zt)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    carry, hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                             jnp.moveaxis(pre.astype(jnp.float32), 1, 0))
+    return carry, jnp.moveaxis(hs, 0, 1)                # (B,S,H,hd)
+
+
+def slstm_apply(params, x, cfg: ModelConfig, **_):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    pre = dense(params["wx"], x).reshape(B, S, 4, H, hd)
+    zero = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H, hd), -1e30, jnp.float32)
+    _, hs = _slstm_scan(params, pre, zero, zero, zero, m0, cfg)
+    return dense(params["wo"], hs.reshape(B, S, D).astype(x.dtype))
+
+
+def slstm_cache_init(cfg: ModelConfig, batch, max_len, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    zero = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero,
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, cache, x, pos, cfg: ModelConfig, active=None):
+    B, _, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    pre = dense(params["wx"], x).reshape(B, 1, 4, H, hd)
+    carry, hs = _slstm_scan(params, pre, cache["h"], cache["c"],
+                            cache["n"], cache["m"], cfg)
+    h, c, n, m = carry
+    y = dense(params["wo"], hs.reshape(B, 1, D).astype(x.dtype))
+    new = {"h": _sel(active, h, cache["h"]), "c": _sel(active, c, cache["c"]),
+           "n": _sel(active, n, cache["n"]), "m": _sel(active, m, cache["m"])}
+    return new, y

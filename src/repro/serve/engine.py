@@ -1,0 +1,103 @@
+"""Batched serving engine: prefill + decode with per-slot request state.
+
+Continuous batching over a fixed pool of batch slots: requests enter a
+waiting queue, are prefilled into their slot's cache rows (per-slot
+positions — other slots are frozen via the ``active`` row mask), and
+decode steps advance every active slot together.  Prefill/decode are the
+same ``forward``/``decode_step`` the dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int = 8
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.active: dict[int, Request] = {}
+        self.pos = np.zeros(batch_slots, dtype=np.int32)
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(
+            lambda p, c, t, pos, act: decode_step(p, c, t, pos, cfg,
+                                                  active=act))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self):
+        for s in range(self.slots):
+            if s not in self.active:
+                return s
+        return None
+
+    def _step_rows(self, tok_b, rows):
+        """One decode step advancing only ``rows`` (active mask)."""
+        act = np.zeros(self.slots, dtype=bool)
+        act[list(rows)] = True
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tok_b),
+            jnp.asarray(self.pos), jnp.asarray(act))
+        return logits
+
+    def _prefill(self, slot: int, req: Request):
+        """Prefill this slot's rows token by token (other slots frozen)."""
+        self.pos[slot] = 0
+        for tok in req.prompt:
+            tok_b = np.zeros((self.slots, 1), np.int32)
+            tok_b[slot, 0] = tok
+            logits = self._step_rows(tok_b, [slot])
+            self.pos[slot] += 1
+        req.out_tokens.append(int(np.asarray(logits[slot, 0]).argmax()))
+
+    def step(self):
+        """One engine step: admit waiting requests, advance all decodes."""
+        while self.queue and (slot := self._free_slot()) is not None:
+            req = self.queue.popleft()
+            self.active[slot] = req
+            self._prefill(slot, req)
+        if not self.active:
+            return False
+        tok_b = np.zeros((self.slots, 1), np.int32)
+        for s, req in self.active.items():
+            tok_b[s, 0] = req.out_tokens[-1]
+        logits = self._step_rows(tok_b, list(self.active))
+        done = []
+        for s, req in list(self.active.items()):
+            nxt = int(np.asarray(logits[s, 0]).argmax())
+            req.out_tokens.append(nxt)
+            self.pos[s] += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                done.append(s)
+        for s in done:
+            del self.active[s]
+        return True
+
+    def run_until_drained(self, max_steps: int = 1000):
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,96 @@
+"""Pipeline parallelism: GPipe-style collective pipeline over a mesh axis.
+
+The layer stack (already stacked with a leading repeat dim) is split into
+``n_stages`` groups laid out along a ``stage`` mesh axis.  Inside
+``shard_map``, every stage holds its parameter shard; microbatches stream
+through via ``lax.ppermute`` rotations: at step t, stage s computes
+microbatch (t - s) — the classic skew — so after a fill of (S-1) steps all
+stages run concurrently.  Forward-only (serving / prefill pipelines);
+training composes this with grad accumulation outside.
+
+This realizes the PP letter of DP/TP/PP/EP/SP on the same mesh fabric the
+redistribution core addresses: stage boundaries are just another
+distributed-layout transition.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh as JMesh, NamedSharding, PartitionSpec as P
+
+
+def split_stages(stacked_params, n_stages: int):
+    """Re-stack (L, ...) layer params as (n_stages, L/n_stages, ...)."""
+    def resplit(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+
+    return jax.tree.map(resplit, stacked_params)
+
+
+def pipeline_forward(stage_params, x_microbatches, apply_layer, *,
+                     mesh: JMesh, stage_axis: str = "stage"):
+    """Run microbatches through the pipeline.
+
+    stage_params: pytree with leading (n_stages, layers_per_stage, ...),
+        sharded so each stage holds its slice (P(stage_axis) on dim 0).
+    x_microbatches: (n_micro, mb, ...) activations (replicated).
+    apply_layer: (layer_params, x) -> x.
+    Returns (n_micro, mb, ...) outputs.
+    """
+    n_stages = mesh.shape[stage_axis]
+    n_micro = x_microbatches.shape[0]
+    steps = n_micro + n_stages - 1
+
+    def stage_fn(params, xs):
+        # params: (1, layers_per_stage, ...) local; xs: (n_micro, mb, ...)
+        sid = jax.lax.axis_index(stage_axis)
+        local = jax.tree.map(lambda v: v[0], params)
+
+        def run_stage(x):
+            def body(h, lp):
+                return apply_layer(lp, h), None
+            h, _ = jax.lax.scan(body, x, local)
+            return h
+
+        out = jnp.zeros_like(xs)
+        carry = jnp.zeros_like(xs[0])
+
+        def step(t, state):
+            carry, out = state
+            # stage 0 ingests microbatch t; others use the rotated carry
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inject = jax.lax.dynamic_index_in_dim(xs, mb_idx, keepdims=False)
+            h = jnp.where(sid == 0, inject, carry)
+            active = (t - sid >= 0) & (t - sid < n_micro)
+            h = jnp.where(active, run_stage(h), h)
+            # last stage emits microbatch (t - n_stages + 1)
+            emit_idx = jnp.clip(t - n_stages + 1, 0, n_micro - 1)
+            do_emit = active & (sid == n_stages - 1)
+            out = jax.lax.cond(
+                do_emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, h, emit_idx, axis=0),
+                lambda o: o, out)
+            # rotate activations to the next stage
+            carry = jax.lax.ppermute(
+                h, stage_axis,
+                perm=[(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return carry, out
+
+        _, out = jax.lax.fori_loop(0, steps, step, (carry, out))
+        # the final outputs live on the last stage; broadcast them
+        out = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, out, jnp.zeros_like(out)),
+            stage_axis)
+        return out
+
+    fn = jax.shard_map(
+        stage_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(stage_axis), stage_params),
+                  P()),
+        out_specs=P(), check_vma=False)
+    return fn(stage_params, x_microbatches)

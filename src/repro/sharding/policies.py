@@ -1,0 +1,194 @@
+"""Sharding policies: parameter/optimizer/activation PartitionSpec trees.
+
+Policies compose:
+  dp    — replicate params, shard batch over data axes.
+  tp    — Megatron tensor parallelism over the "model" axis (attention
+          heads / FFN hidden / vocab); EP for MoE experts.
+  fsdp  — additionally shard the largest remaining parameter dim over the
+          data axes (params gathered per layer by XLA).
+  zero1 — optimizer moments sharded over data axes even when params are
+          only TP-sharded.
+
+Specs are *hints* under pjit/GSPMD: any assignment is semantics-preserving,
+XLA inserts the collectives — which is exactly the setting the paper's
+redistribution synthesis optimizes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey, SequenceKey
+
+from repro.models.config import ModelConfig
+
+MODEL = "model"
+
+
+def _path_names(path):
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+    return out
+
+
+# parameter-name -> (dim sharded by TP) for 2D kernels (without any leading
+# stacked/expert dims).  +1 = output dim, 0 = input dim.
+_TP_OUT = {"wq", "wk", "wv", "wi", "wg", "wx", "wy", "wq_b", "wkv_b", "wup",
+           "w_input_gate", "w_rec_gate"}
+_TP_IN = {"wo"}
+_REPLICATE = {"router", "wq_a", "wkv_a", "wf", "frontend_proj", "conv", "r",
+              "b", "scale", "lam"}
+
+
+def param_specs(params, cfg: ModelConfig, *, data_axes: tuple[str, ...],
+                policy: str = "tp") -> object:
+    """PartitionSpec tree matching the param tree."""
+    use_tp = policy in ("tp", "fsdp", "fsdp+tp", "fsdp_etp")
+    use_fsdp = policy.startswith("fsdp")
+    etp = policy == "fsdp_etp"
+    data = tuple(data_axes)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        shape = np.shape(leaf)
+        nd = len(shape)
+        stacked = "blocks" in names          # leading layer-repeat dim
+        lead = 1 if stacked else 0
+        entry = [None] * nd
+        pname = None
+        for n in reversed(names):
+            if n not in ("w",):
+                pname = n
+                break
+        if nd - lead == 0 or nd - lead == 1:
+            return P(*entry)
+
+        def place(i, axes):
+            """Shard dim i over axes iff free and divisible."""
+            prod = int(np.prod([_axis_size(a) for a in
+                                ((axes,) if isinstance(axes, str) else axes)]))
+            if entry[i] is None and shape[i] % prod == 0 and shape[i] >= prod:
+                entry[i] = axes
+                return True
+            return False
+
+        is_expert = pname in ("wi", "wg", "wo") and nd - lead == 3
+        if use_tp:
+            if is_expert and etp:
+                # EP over model + tensor-parallel F over data: expert
+                # weights are never gathered; only activations move.
+                place(lead, MODEL) or place(nd - 1, MODEL)
+                fdim = nd - 1 if pname in ("wi", "wg") else lead + 1
+                daxes = data if len(data) > 1 else data[0]
+                place(fdim, daxes)
+                return P(*entry)   # exempt from generic FSDP below
+            elif is_expert:
+                # EP over model; if E doesn't divide, shard the FFN dim
+                place(lead, MODEL) or place(nd - 1, MODEL)
+            elif pname == "embed" or (len(names) >= 2
+                                      and names[-2] == "embed"):
+                place(lead, MODEL) or place(lead + 1, MODEL)
+            elif pname == "lm_head" or (len(names) >= 2
+                                        and names[-2] == "lm_head"):
+                place(lead + 1, MODEL) or place(lead, MODEL)
+            elif pname in _TP_OUT:
+                place(nd - 1, MODEL) or place(lead, MODEL)
+            elif pname in _TP_IN:
+                place(lead, MODEL) or place(nd - 1, MODEL)
+        if use_fsdp:
+            # shard the largest still-unsharded dim over the data axes
+            daxes = data if len(data) > 1 else data[0]
+            cand = [i for i in range(lead, nd) if entry[i] is None
+                    and shape[i] % int(np.prod([_axis_size(a) for a in data])
+                                       ) == 0]
+            if cand:
+                big = max(cand, key=lambda i: shape[i])
+                entry[big] = daxes
+        return P(*entry)
+
+    return tree_map_with_path(spec_for, params)
+
+
+_AXIS_SIZES: dict[str, int] = {}
+
+
+def _axis_size(a: str) -> int:
+    return _AXIS_SIZES.get(a, 1)
+
+
+def set_axis_sizes(sizes: dict[str, int]):
+    _AXIS_SIZES.clear()
+    _AXIS_SIZES.update(sizes)
+
+
+def opt_state_specs(params, pspecs, *, data_axes: tuple[str, ...],
+                    zero1: bool = True):
+    """Moments mirror the params' specs; ZeRO-1 additionally shards
+    moments of data-replicated params over the data axes (largest
+    divisible dim), cutting optimizer memory by the DP degree."""
+    data = tuple(data_axes)
+    n_data = int(np.prod([_axis_size(a) for a in data_axes]))
+
+    def moment_spec(p, spec):
+        ent = list(spec) if len(spec) else [None] * np.ndim(p)
+        while len(ent) < np.ndim(p):
+            ent.append(None)
+        if zero1 and not any(e in (data, data_axes[0]) or
+                             (isinstance(e, tuple) and set(e) & set(data))
+                             for e in ent if e):
+            shape = np.shape(p)
+            cand = [i for i in range(len(ent)) if ent[i] is None
+                    and shape[i] % n_data == 0]
+            if cand:
+                big = max(cand, key=lambda i: shape[i])
+                ent[big] = data if len(data) > 1 else data[0]
+        return P(*ent)
+
+    mspec = jax.tree.map(moment_spec, params, pspecs)
+    return {"mu": mspec, "nu": jax.tree.map(lambda s: s, mspec),
+            "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, data_axes: tuple[str, ...]):
+    d = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    tok = P(d, None, None) if cfg.n_codebooks > 1 else P(d, None)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.frontend:
+        specs["frontend_embeds"] = P(d, None, None)
+    return specs
+
+
+def cache_specs(cache, data_axes: tuple[str, ...], batch_size: int,
+                seq_shard: bool = False):
+    """KV/state caches: batch over data when divisible, else heads/width
+    over model; leading dim is the layer stack.  ``seq_shard=True``
+    additionally shards the cache length dim over the model axis
+    (sequence-parallel KV — decode attention reduces partial softmax
+    across model shards instead of replicating the cache)."""
+    d = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    n_data = int(np.prod([_axis_size(a) for a in data_axes]))
+
+    def spec_for(path, leaf):
+        shape = np.shape(leaf)
+        nd = len(shape)
+        entry = [None] * nd
+        # leaf layout: (layer_stack, B, ...)
+        if nd >= 2 and shape[1] == batch_size and batch_size % n_data == 0:
+            entry[1] = d
+            if seq_shard and nd >= 4 and shape[2] % _axis_size(MODEL) == 0:
+                entry[2] = MODEL   # (stack, B, L, ...) length dim
+        elif nd >= 3:
+            # long-context single-sequence decode: shard the largest
+            # non-batch dim over model (sequence/width parallelism)
+            cand = [i for i in range(2, nd)
+                    if shape[i] % _axis_size(MODEL) == 0]
+            if cand:
+                big = max(cand, key=lambda i: shape[i])
+                entry[big] = MODEL
+        return P(*entry)
+
+    return tree_map_with_path(spec_for, cache)

@@ -1,0 +1,56 @@
+"""Ablations for the beyond-paper optimizations (B1/B2)."""
+import math
+import random
+
+from repro.core import Mesh, lower, parse_type
+from repro.core.api import plan_redistribution
+from repro.core.dist_types import decompose_type
+from repro.core.interp import verify_plan
+from repro.core.search import synthesize
+
+
+class TestAssignmentMatchingB2:
+    def test_matching_never_adds_permutes(self):
+        """B2 (greedy pullback + biased dynslice) vs naive lowering:
+        matched lowering produces <= permutes, with both plans correct."""
+        cases = [
+            ("[12, 10]", "[6{a}12, 5{b}10]", {"a": 2, "b": 2}),
+            ("[8{a,b}64, 6]", "[64, 6]", {"a": 2, "b": 4}),
+            ("[3{x}12, 2{y}12]", "[2{y}12, 3{x}12]", {"x": 4, "y": 6}),
+            ("[16, 6]", "[2{a,b}16, 6]", {"a": 2, "b": 4}),
+        ]
+        for t1s, t2s, meshspec in cases:
+            mesh = Mesh.make(meshspec)
+            t1, t2 = parse_type(t1s), parse_type(t2s)
+            dmesh, _ = mesh.decompose_primes()
+            res = synthesize(decompose_type(t1, mesh),
+                             decompose_type(t2, mesh), dmesh)
+            matched = lower(res.ops, t1, t2, mesh, match_assignment=True)
+            naive = lower(res.ops, t1, t2, mesh, match_assignment=False)
+            verify_plan(matched, t1, t2, mesh)
+            verify_plan(naive, t1, t2, mesh)
+            assert matched.n_permutes() <= naive.n_permutes()
+
+    def test_matching_elides_permute_on_slices(self):
+        mesh = Mesh.make({"a": 2, "b": 2})
+        t1, t2 = parse_type("[16, 6]"), parse_type("[4{a,b}16, 6]")
+        dmesh, _ = mesh.decompose_primes()
+        res = synthesize(decompose_type(t1, mesh), decompose_type(t2, mesh),
+                         dmesh)
+        matched = lower(res.ops, t1, t2, mesh, match_assignment=True)
+        assert matched.n_permutes() == 0
+
+
+class TestLatencyAwareB1:
+    def test_latency_objective_never_plans_more_ops_on_tiny_arrays(self):
+        rng = random.Random(7)
+        mesh = Mesh.make({"a": 2, "b": 2, "c": 2})
+        for _ in range(10):
+            # tiny arrays: latency dominates; fewer collectives preferred
+            t1s = "[8{a}16, 4{b}8, 6]"
+            t2s = "[4{a,b}16, 8, 6]" if rng.random() < 0.5 \
+                else "[8{b}16, 4{a}8, 6]"
+            rp = plan_redistribution(t1s, t2s, mesh, objective="paper")
+            rt = plan_redistribution(t1s, t2s, mesh, objective="time")
+            assert len(rt.plan.ops) <= len(rp.plan.ops) + 1
+            verify_plan(rt.plan, rt.t1, rt.t2, rt.mesh)

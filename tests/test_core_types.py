@@ -1,0 +1,164 @@
+"""Unit tests: distributed types, meshes, base offset maps, typing rules."""
+import numpy as np
+import pytest
+
+from repro.core import (AllGather, AllPermute, AllToAll, DynSlice, Mesh,
+                        TypingError, apply, apply_seq, base_offset_map,
+                        check_wf, decompose_type, dim, dtype_of, equivalent,
+                        parse_type, prime_factors, valid_redistribution)
+
+
+def mesh(**kw):
+    return Mesh.make(kw)
+
+
+class TestMesh:
+    def test_coords_roundtrip(self):
+        m = mesh(x=2, y=3, z=2)
+        for i, c in enumerate(m.coords()):
+            assert m.id_of(c) == i
+            assert m.coord_of(i) == c
+
+    def test_prime_decomposition_preserves_device_order(self):
+        m = mesh(x=12, y=2)
+        dm, sub = m.decompose_primes()
+        assert sub["x"] == ("x@0", "x@1", "x@2")
+        assert dm.nelems == 24
+        # x coordinate c decomposes with x@0 minor (fastest) so that the
+        # raveled device order is unchanged.
+        for dev in range(24):
+            cx, cy = m.coord_of(dev)
+            dcoord = dict(zip(dm.names, dm.coord_of(dev)))
+            radix = 1
+            got = 0
+            for s in sub["x"]:
+                got += dcoord[s] * radix
+                radix *= dm.size(s)
+            assert got == cx
+            assert dcoord["y"] == cy
+
+    def test_prime_factors(self):
+        assert prime_factors(1) == ()
+        assert prime_factors(12) == (2, 2, 3)
+        assert prime_factors(97) == (97,)
+
+
+class TestTypes:
+    def test_parse_roundtrip(self):
+        t = parse_type("[8{x,y}256, 1024]")
+        assert t.dims[0].tile == 8 and t.dims[0].axes == ("x", "y")
+        assert t.localtype() == (8, 1024)
+        assert t.globaltype() == (256, 1024)
+        assert str(parse_type(str(t))) == str(t)
+
+    def test_wf(self):
+        m = mesh(x=4, y=8)
+        check_wf(parse_type("[64{x}256, 1024]"), m)
+        with pytest.raises(TypingError):   # sizes do not multiply out
+            check_wf(parse_type("[64{x}512, 1024]"), m)
+        with pytest.raises(TypingError):   # axis used twice
+            check_wf(parse_type("[64{x}256, 256{x}1024]"), m)
+        with pytest.raises(TypingError):   # unknown axis
+            check_wf(parse_type("[64{q}256]"), m)
+
+    def test_validity_examples_from_paper(self):
+        # §2.5: same local shapes but different global arrays -> invalid.
+        m = mesh(xdevs=4, ydevs=8)
+        t1 = parse_type("[32{xdevs}128, 32{ydevs}256]")
+        t2 = parse_type("[32{xdevs,ydevs}1024, 32]")
+        assert not valid_redistribution(t1, t2, m)
+
+    def test_decompose_type_offsets_identical(self):
+        m = mesh(x=12, y=2)
+        t = parse_type("[2{x}24, 8{y}16]")
+        dm, _ = m.decompose_primes()
+        dt = decompose_type(t, m)
+        check_wf(dt, dm)
+        assert np.array_equal(base_offset_map(t, m), base_offset_map(dt, dm))
+
+
+class TestOffsets:
+    def test_lemma_4_2_image_is_full_tiling(self):
+        # Lemma 4.2: T[[τ]] hits all base offsets below globaltype.
+        m = mesh(x=2, y=3, z=2)
+        t = parse_type("[4{y,x}24, 6{z}12]")
+        beta = base_offset_map(t, m)
+        rows = {tuple(r) for r in beta}
+        expect = {(a, b) for a in range(0, 24, 4) for b in range(0, 12, 6)}
+        assert rows == expect
+
+    def test_minor_major_order(self):
+        # [8{x,y}32]: x minor (stride 8), y major (stride 16) over x:2,y:2.
+        m = mesh(x=2, y=2)
+        t = parse_type("[8{x,y}32]")
+        beta = base_offset_map(t, m)
+        # device order: (x,y) row-major with y fastest.
+        offs = {m.coord_of(d): beta[d, 0] for d in range(4)}
+        assert offs[(0, 0)] == 0
+        assert offs[(1, 0)] == 8     # x minor: stride 8
+        assert offs[(0, 1)] == 16    # y major: stride 16
+        assert offs[(1, 1)] == 24
+
+    def test_equivalence_lemma_5_1(self):
+        # Same local+global type => permutation equivalent.
+        m = mesh(x=4, y=4)
+        t1 = parse_type("[64{y,x}1024, 128]")
+        t2 = parse_type("[64{x,y}1024, 128]")
+        assert equivalent(base_offset_map(t1, m), base_offset_map(t2, m))
+        t3 = parse_type("[32{x}128, 16{y}64]")
+        t4 = parse_type("[32{y}128, 16{x}64]")
+        assert equivalent(base_offset_map(t3, m), base_offset_map(t4, m))
+
+
+class TestTypingRules:
+    def test_allgather_removes_minor_most(self):
+        m = mesh(x=4, y=4)
+        t = parse_type("[32{x,y}512, 512]")
+        out = apply(AllGather(0), t, m)
+        assert str(out) == "[128{y}512, 512]"
+
+    def test_allgather_rejects_non_minor(self):
+        m = mesh(x=4, y=4)
+        t = parse_type("[32{x,y}512, 512]")
+        with pytest.raises(TypingError):
+            apply(AllGather(0, ("y",)), t, m)
+
+    def test_dynslice(self):
+        m = mesh(x=4, y=4)
+        t = parse_type("[128{y}512, 512]")
+        out = apply(DynSlice(1, ("x",)), t, m)
+        assert str(out) == "[128{y}512, 128{x}512]"
+        with pytest.raises(TypingError):   # y already used
+            apply(DynSlice(1, ("y",)), t, m)
+        with pytest.raises(TypingError):   # not divisible
+            apply(DynSlice(0, ("x",)), parse_type("[2{y}8, 512]"),
+                  mesh(x=3, y=4))
+
+    def test_alltoall(self):
+        m = mesh(devs=32)
+        t = parse_type("[32, 64{devs}2048]")
+        out = apply(AllToAll(1, 0), t, m)
+        assert str(out) == "[1{devs}32, 2048]"
+
+    def test_listing3_chain(self):
+        # The redistribute from Listing 3 as a single alltoall.
+        m = mesh(devs=32)
+        t1 = parse_type("[32, 64{devs}2048]")
+        t2 = parse_type("[1{devs}32, 2048]")
+        types = apply_seq([AllToAll(1, 0)], t1, m)
+        assert types[-1] == t2
+
+    def test_permute(self):
+        m = mesh(xdev=4, ydev=4)
+        t1 = parse_type("[32{xdev}128]")
+        t2 = parse_type("[32{ydev}128]")
+        out = apply(AllPermute(t2), t1, m)
+        assert out == t2
+        with pytest.raises(TypingError):
+            apply(AllPermute(parse_type("[16{xdev,ydev}256]")), t1, m)
+
+    def test_multi_axis_gather(self):
+        m = mesh(x=4, y=4)
+        t = parse_type("[32{x,y}512, 512]")
+        out = apply(AllGather(0, ("x", "y")), t, m)
+        assert str(out) == "[512, 512]"

@@ -1,0 +1,103 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, sweeping
+shapes and dtypes (task spec c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+class TestTileRelayout:
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int32"])
+    @pytest.mark.parametrize("C,a,b", [(2, 4, 8), (4, 8, 128), (6, 2, 512),
+                                       (3, 16, 100)])
+    def test_matches_ref(self, C, a, b, dtype):
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(C * a, b)).astype(dtype)
+        perm = tuple(rng.permutation(C).tolist())
+        got = ops.tile_relayout(x, perm, interpret=True)
+        want = ref.tile_relayout_ref(x, perm)
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 64),
+           st.randoms())
+    def test_property_random(self, C, a, b, rnd):
+        perm = list(range(C))
+        rnd.shuffle(perm)
+        x = jnp.arange(C * a * b, dtype=jnp.float32).reshape(C * a, b)
+        got = ops.tile_relayout(x, tuple(perm), interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.tile_relayout_ref(x, tuple(perm))))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("B,H,KV,S,d", [
+        (1, 2, 2, 128, 32), (2, 4, 2, 256, 64), (1, 8, 1, 128, 64),
+    ])
+    def test_causal_matches_ref(self, B, H, KV, S, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = (jax.random.normal(ks[0], (B, H, S, d)) * 0.5).astype(dtype)
+        k = (jax.random.normal(ks[1], (B, KV, S, d)) * 0.5).astype(dtype)
+        v = (jax.random.normal(ks[2], (B, KV, S, d)) * 0.5).astype(dtype)
+        got = ops.flash_attention(q, k, v, causal=True, q_block=64,
+                                  k_block=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == "bfloat16" else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_non_causal(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 32))
+        k = jax.random.normal(ks[1], (1, 2, 128, 32))
+        v = jax.random.normal(ks[2], (1, 2, 128, 32))
+        got = ops.flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_shape_independence(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 32))
+        k = jax.random.normal(ks[1], (1, 1, 256, 32))
+        v = jax.random.normal(ks[2], (1, 1, 256, 32))
+        a = ops.flash_attention(q, k, v, q_block=64, k_block=128,
+                                interpret=True)
+        b = ops.flash_attention(q, k, v, q_block=256, k_block=32,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("B,S,R,chunk", [
+        (1, 128, 128, 32), (2, 256, 256, 256), (3, 64, 128, 16),
+    ])
+    def test_matches_ref(self, B, S, R, chunk, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R))).astype(dtype)
+        b = (jax.random.normal(ks[1], (B, S, R)) * 0.1).astype(dtype)
+        got = ops.rglru_scan(a, b, seq_chunk=chunk, interpret=True)
+        want = ref.rglru_scan_ref(a, b)
+        tol = 3e-2 if dtype == "bfloat16" else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_decay_semantics(self):
+        # a=0 => h = b; a=1,b=0 => h stays 0
+        B, S, R = 1, 64, 128
+        z = jnp.zeros((B, S, R))
+        o = jnp.ones((B, S, R))
+        np.testing.assert_allclose(
+            np.asarray(ops.rglru_scan(z, o, interpret=True)), 1.0)
+        np.testing.assert_allclose(
+            np.asarray(ops.rglru_scan(o, z, interpret=True)), 0.0)

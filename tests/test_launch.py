@@ -1,0 +1,116 @@
+"""Launch-layer tests: sharding assembly, HLO parsing, roofline math,
+and a true (subprocess) production-mesh dry-run of one small cell."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import SHAPES, get_config
+from repro.launch.hlo_analysis import collective_bytes, count_ops, shape_bytes
+from repro.launch.roofline import corrected_metrics, model_flops
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+class TestHLOAnalysis:
+    HLO = textwrap.dedent("""
+      %x = bf16[128,256]{1,0} all-gather(%a), replica_groups={{0,1}}
+      %y = (f32[64]{0}, f32[64]{0}) all-to-all(%b, %c), dimensions={0}
+      %z = f32[32,32]{1,0} all-reduce(%d), to_apply=%add
+      %w = f32[16]{0} collective-permute-start(%e), source_target_pairs={{0,1}}
+      %v = bf16[8,8]{1,0} dot(%f, %g)
+    """)
+
+    def test_shape_bytes(self):
+        assert shape_bytes("bf16", "128,256") == 128 * 256 * 2
+        assert shape_bytes("f32", "") == 4
+
+    def test_collective_bytes(self):
+        res = collective_bytes(self.HLO)
+        assert res["bytes"]["all-gather"] == 128 * 256 * 2
+        assert res["bytes"]["all-to-all"] == 2 * 64 * 4
+        assert res["bytes"]["all-reduce"] == 32 * 32 * 4
+        assert res["bytes"]["collective-permute"] == 16 * 4
+        assert res["count"]["all-to-all"] == 1
+
+    def test_count_ops(self):
+        ops = count_ops(self.HLO)
+        assert ops["dot"] == 1
+
+
+class TestRooflineMath:
+    def test_corrected_metrics_extrapolation(self):
+        cell = {"pattern_len": 1, "pattern_repeats": 10, "remainder_len": 0,
+                "flops": 100.0, "bytes_accessed": 10.0,
+                "collective_bytes": {"total_bytes": 5}}
+        # unrolled probes: outer=40, body=30
+        p1 = {"flops": 70.0, "bytes_accessed": 7.0,
+              "collective_bytes": {"total_bytes": 3}}
+        p2 = {"flops": 100.0, "bytes_accessed": 9.0,
+              "collective_bytes": {"total_bytes": 4}}
+        m = corrected_metrics(cell, p1, p2)
+        assert m["flops"]["corrected"] == pytest.approx(40 + 10 * 30)
+        assert m["bytes_accessed"]["corrected"] == pytest.approx(5 + 10 * 2)
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = get_config("olmo_1b")
+        tr = model_flops(cfg, SHAPES["train_4k"], 256)
+        de = model_flops(cfg, SHAPES["decode_32k"], 256)
+        assert tr > de * 1000
+        # train: 6*N*tokens/dev
+        expect = 6 * cfg.active_param_count() * 256 * 4096 / 256
+        assert tr == pytest.approx(expect)
+
+
+class TestProductionDryRun:
+    @pytest.mark.slow
+    def test_one_cell_on_512_fake_devices(self, tmp_path):
+        """The real thing, end to end, for the smallest arch."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "qwen2_0_5b", "--shape", "decode_32k", "--multi-pod",
+             "--out", str(tmp_path)],
+            capture_output=True, text=True, env=env, timeout=900,
+            cwd=str(Path(SRC).parent))
+        assert out.returncode == 0, out.stderr[-2000:]
+        res = json.loads(
+            (tmp_path / "qwen2_0_5b.decode_32k.multipod.json").read_text())
+        assert res["status"] == "ok"
+        assert res["n_devices"] == 512
+        assert res["flops"] > 0
+        assert res["collective_bytes"]["total_bytes"] > 0
+
+
+class TestShardingPolicies:
+    def test_specs_divisible_everywhere(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.steps import abstract_params
+        from repro.sharding import policies
+
+        policies.set_axis_sizes({"data": 16, "model": 16})
+        for arch in ("qwen2_0_5b", "mixtral_8x22b", "minicpm3_4b",
+                     "xlstm_1_3b"):
+            cfg = get_config(arch)
+            params = abstract_params(cfg)
+            specs = policies.param_specs(params, cfg, data_axes=("data",),
+                                         policy="fsdp")
+            flat_p = jax.tree.leaves(params)
+            flat_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            for leaf, spec in zip(flat_p, flat_s):
+                for i, ent in enumerate(spec):
+                    if ent is None:
+                        continue
+                    axes = (ent,) if isinstance(ent, str) else ent
+                    prod = int(np.prod([16 for _ in axes]))
+                    assert leaf.shape[i] % prod == 0, (arch, leaf.shape, spec)

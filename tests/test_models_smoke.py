@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests on REDUCED configs (task spec f):
+one forward/train step on CPU asserting shapes + finiteness, a decode
+step, and decode-vs-forward numerical equivalence (cache correctness).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+
+
+def make_batch(cfg, key, batch=2, seq=16):
+    tk, fk = jax.random.split(key)
+    shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, seq)
+    tokens = jax.random.randint(tk, shape, 0, cfg.vocab)
+    b = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        b["frontend_embeds"] = jax.random.normal(
+            fk, (batch, cfg.frontend_len, cfg.d_model)) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key, batch=2, seq=16)
+    logits, aux = forward(params, batch, cfg, remat=False)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    loss, metrics = loss_fn(params, batch, cfg, remat=False)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key, batch=2, seq=8)
+
+    def loss(p):
+        return loss_fn(p, batch, cfg, remat=True)[0]
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_shapes(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    B, L = 2, 16
+    cache = init_cache(cfg, B, L)
+    shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    tok = jnp.zeros(shape, jnp.int32)
+    logits, cache2 = decode_step(params, cache, tok, 0, cfg)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    # structure preserved
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+# Archs whose frontend stub makes teacher-forced decode ambiguous are
+# exercised above; the equivalence check runs on the pure-decoder archs.
+EQUIV_ARCHS = ["olmo_1b", "qwen2_0_5b", "minicpm3_4b", "stablelm_12b",
+               "recurrentgemma_2b", "xlstm_1_3b", "mixtral_8x22b",
+               "musicgen_medium"]
+
+
+@pytest.mark.parametrize("arch", EQUIV_ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the training forward logits —
+    the strongest cache/state correctness check we can run on CPU."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(3)
+    params = init_params(key, cfg)
+    B, S = 2, 8
+    batch = make_batch(cfg, key, batch=B, seq=S)
+    ref_logits, _ = forward(params, batch, cfg, remat=False)
+
+    cache = init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        tok = batch["tokens"][:, t: t + 1]
+        logits, cache = decode_step(params, cache, tok, t, cfg)
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_spec():
+    """Full configs must land near the published parameter counts."""
+    expect = {
+        "olmo_1b": (0.9e9, 1.6e9),
+        "minicpm3_4b": (3.0e9, 5.0e9),
+        "stablelm_12b": (10e9, 14e9),
+        "qwen2_0_5b": (0.3e9, 0.7e9),
+        "internvl2_2b": (1.5e9, 2.6e9),
+        "recurrentgemma_2b": (2.0e9, 3.2e9),
+        "xlstm_1_3b": (0.9e9, 1.9e9),
+        "musicgen_medium": (1.0e9, 2.2e9),
+        "arctic_480b": (420e9, 520e9),
+        "mixtral_8x22b": (120e9, 150e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("arctic_480b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()

@@ -1,0 +1,81 @@
+"""Property-based tests (hypothesis): the paper's theorems on random inputs.
+
+For random (mesh, τ1, τ2) redistribution problems:
+  * the synthesized plan is CORRECT (interpreter matches direct re-tiling),
+  * it satisfies the MEMORY GUARANTEE h ≤ max(localsize τ1, localsize τ2),
+  * it contains at most ONE allpermute (Thm 6.7),
+  * its weak kinds are in NORMAL FORM (Thm 4.8),
+  * its cost never exceeds the XLA fallback's cost (near-optimality side),
+  * the XLA-baseline plan is also correct (baseline validity).
+"""
+import math
+import random
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Mesh, is_normal_form, plan_redistribution, plan_xla,
+                        verify_plan)
+from repro.core.dist_types import DistDim, DistType
+
+
+@st.composite
+def redistribution_problem(draw):
+    """Random mesh (2-3 axes), rank 1-3 arrays, random partitionings."""
+    n_axes = draw(st.integers(2, 3))
+    axis_sizes = [draw(st.sampled_from([2, 2, 2, 3, 4]))
+                  for _ in range(n_axes)]
+    names = [f"ax{i}" for i in range(n_axes)]
+    mesh = Mesh.make(dict(zip(names, axis_sizes)))
+
+    rank = draw(st.integers(1, 3))
+    base = [draw(st.sampled_from([1, 2, 3, 4])) for _ in range(rank)]
+
+    def random_type():
+        # each mesh axis partitions at most one dim (or is unused)
+        placement = {}
+        for a in names:
+            where = draw(st.integers(-1, rank - 1))
+            if where >= 0:
+                placement.setdefault(where, []).append(a)
+        dims = []
+        for i in range(rank):
+            axes = tuple(placement.get(i, []))
+            prod = math.prod(mesh.size(a) for a in axes)
+            glob = base[i] * mesh.nelems  # divisible by any axis subset
+            dims.append(DistDim(glob // prod, axes, glob))
+        return DistType(tuple(dims))
+
+    return mesh, random_type(), random_type()
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(redistribution_problem())
+def test_synthesized_plans_obey_the_paper(problem):
+    mesh, t1, t2 = problem
+    r = plan_redistribution(t1, t2, mesh)
+    res = verify_plan(r.plan, t1, t2, mesh)                 # correctness
+    bound = max(math.prod(t1.localtype()), math.prod(t2.localtype()))
+    assert res.peak_elems <= bound                          # memory (Thm 4.8)
+    assert r.plan.n_permutes() <= 1                         # Thm 6.7
+    kinds = [k for k in r.plan.kinds()]
+    if kinds and kinds[-1] == "allpermute":
+        kinds = kinds[:-1]                                  # Thm 6.7 tail
+    assert is_normal_form(kinds)                            # Def. 4.5 (+1 perm)
+
+    xla = plan_xla(t1, t2, mesh)
+    verify_plan(xla, t1, t2, mesh)                          # baseline validity
+    assert r.plan.cost() <= xla.cost() + math.prod(t2.localtype())
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(redistribution_problem())
+def test_time_objective_also_correct(problem):
+    mesh, t1, t2 = problem
+    r = plan_redistribution(t1, t2, mesh, objective="time")
+    verify_plan(r.plan, t1, t2, mesh)
+    bound = max(math.prod(t1.localtype()), math.prod(t2.localtype()))
+    assert verify_plan(r.plan, t1, t2, mesh).peak_elems <= bound

@@ -1,0 +1,204 @@
+"""Substrate tests: data determinism, optimizer, compression, checkpoint/
+restart, elastic reshard planning, trainer fault tolerance, serving."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.optim import compress
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state, schedule
+from repro.checkpoint import ckpt
+from repro.checkpoint.elastic import dist_type_of, reshard_plan
+from repro.core import Mesh as CMesh
+from repro.train.trainer import TrainConfig, train
+from repro.serve.engine import Request, ServeEngine
+from jax.sharding import PartitionSpec as P
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=64)
+
+
+class TestData:
+    def test_deterministic_and_shardable(self):
+        data = SyntheticLM(TINY, DataConfig(global_batch=4, seq_len=16))
+        g1 = data.global_batch(3)
+        g2 = data.global_batch(3)
+        np.testing.assert_array_equal(g1["tokens"], g2["tokens"])
+        # shards tile the global batch exactly
+        s0 = data.shard_batch(3, 0, 2)
+        s1 = data.shard_batch(3, 1, 2)
+        np.testing.assert_array_equal(
+            np.concatenate([s0["tokens"], s1["tokens"]]), g1["tokens"])
+
+    def test_labels_shifted(self):
+        data = SyntheticLM(TINY, DataConfig(global_batch=2, seq_len=16))
+        b = data.global_batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestOptim:
+    def test_adamw_descends_quadratic(self):
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = init_state(params)
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=1000, grad_clip=0)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = apply_updates(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(
+            cfg.min_lr_ratio, rel=1e-3)
+
+    def test_compression_error_feedback(self):
+        # with error feedback, the *accumulated* dequantized signal tracks
+        # the true accumulated gradient
+        g = {"w": jnp.full((128,), 0.001)}
+        err = compress.init_error(g)
+        total = jnp.zeros((128,))
+        for _ in range(50):
+            deq, err = compress.apply(g, err)
+            total = total + deq["w"]
+        np.testing.assert_allclose(np.asarray(total), 0.05, rtol=0.15)
+
+    def test_compression_bounded_error(self):
+        key = jax.random.PRNGKey(0)
+        g = {"w": jax.random.normal(key, (64, 64))}
+        err = compress.init_error(g)
+        deq, err2 = compress.apply(g, err)
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+        assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.51
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        params = init_params(jax.random.PRNGKey(0), TINY)
+        opt = init_state(params)
+        ckpt.save(tmp_path, 7, (params, opt))
+        (p2, o2), step = ckpt.restore(tmp_path, (params, opt))
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), b)
+
+    def test_async_save(self, tmp_path):
+        params = init_params(jax.random.PRNGKey(0), TINY)
+        t = ckpt.save(tmp_path, 3, params, blocking=False)
+        t.join()
+        assert ckpt.latest_step(tmp_path) == 3
+
+
+class TestElastic:
+    def test_dist_type_of_roundtrip(self):
+        mesh = CMesh.make({"data": 4, "model": 2})
+        t = dist_type_of((64, 32), P("data", "model"), mesh)
+        assert t.localtype() == (16, 16)
+        t2 = dist_type_of((64, 32), P(("data", "model"),), mesh)
+        assert t2.localtype() == (8, 32)
+        # major-to-minor reversal: data is major
+        assert t2.dims[0].axes == ("model", "data")
+
+    def test_reshard_plan_beats_baseline(self):
+        # TP-degree change: (data 4, model 2) -> (data 2, model 4) layouts
+        mesh = CMesh.make({"data": 4, "model": 2})
+        shapes = {"wq": (256, 128), "wo": (128, 256), "embed": (1024, 128)}
+        old = {"wq": P(None, "model"), "wo": P("model", None),
+               "embed": P(("data", "model"), None)}
+        new = {"wq": P(None, ("data", "model")), "wo": P(("data", "model"),),
+               "embed": P("model", "data")}
+        plans, rep = reshard_plan(shapes, old, new, mesh)
+        assert rep.n_replanned == 3
+        assert rep.ours_peak_elems <= rep.xla_peak_elems
+        assert rep.ours_cost_elems <= rep.xla_cost_elems
+        # every per-leaf plan satisfies the paper's memory bound
+        for name, plan in plans.items():
+            assert plan.height() <= max(
+                math.prod(plan.src_localtype), math.prod(plan.dst_localtype))
+
+
+class TestTrainer:
+    def test_loss_decreases(self, tmp_path):
+        res = train(TINY, TrainConfig(steps=40, ckpt_dir=None),
+                    DataConfig(global_batch=8, seq_len=32),
+                    AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40))
+        assert res.steps_run == 40
+        first = np.mean(res.losses[:5])
+        last = np.mean(res.losses[-5:])
+        assert last < first - 0.1, (first, last)
+
+    def test_checkpoint_restart_resumes_exactly(self, tmp_path):
+        d = DataConfig(global_batch=4, seq_len=16)
+        full = train(TINY, TrainConfig(steps=12, ckpt_every=6,
+                                       ckpt_dir=None, seed=5), d)
+        # crash after step 6 (simulated by only running 6 steps)
+        train(TINY, TrainConfig(steps=6, ckpt_every=6,
+                                ckpt_dir=str(tmp_path), seed=5,
+                                async_ckpt=False), d)
+        resumed = train(TINY, TrainConfig(steps=12, ckpt_every=6,
+                                          ckpt_dir=str(tmp_path), seed=5,
+                                          async_ckpt=False), d)
+        assert resumed.restored_from == 6
+        # CPU XLA reductions are not bitwise run-to-run deterministic;
+        # resume-correctness is loss-trajectory equality to tight tolerance.
+        np.testing.assert_allclose(resumed.losses, full.losses[6:],
+                                   rtol=1e-2, atol=1e-3)
+
+    def test_microbatching_matches_full_batch(self):
+        d = DataConfig(global_batch=8, seq_len=16)
+        one = train(TINY, TrainConfig(steps=3, microbatches=1, seed=2), d)
+        four = train(TINY, TrainConfig(steps=3, microbatches=4, seed=2), d)
+        np.testing.assert_allclose(one.losses, four.losses, rtol=2e-3)
+
+    def test_grad_compression_trains(self):
+        d = DataConfig(global_batch=8, seq_len=32)
+        res = train(TINY, TrainConfig(steps=25, grad_compression=True), d)
+        assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5])
+
+
+class TestServe:
+    def test_batched_serving_drains(self):
+        cfg = TINY
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+        reqs = [Request(rid=i, prompt=np.arange(3 + i) % cfg.vocab,
+                        max_new_tokens=4) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        for r in reqs:
+            assert r.done and len(r.out_tokens) >= 4
+
+    def test_batching_does_not_change_outputs(self):
+        """Prefill logits for a slot must be independent of co-batched
+        requests.  (Compared as logits with tolerance: greedy token chains
+        of an untrained model diverge on argmax near-ties under CPU
+        thread-order float nondeterminism.)"""
+        cfg = TINY
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompt = np.array([5, 9, 2])
+
+        def prefill_logits(engine, slot, toks):
+            logits = None
+            for t, tok in enumerate(toks):
+                tok_b = np.zeros((engine.slots, 1), np.int32)
+                tok_b[slot, 0] = tok
+                logits = engine._step_rows(tok_b, [slot])
+                engine.pos[slot] += 1
+            return np.asarray(logits[slot, 0], np.float32)
+
+        eng1 = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+        l1 = prefill_logits(eng1, 0, prompt)
+        eng2 = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+        # co-batched: another request occupies slot 1 first
+        other = prefill_logits(eng2, 1, np.array([7, 7, 7, 7]))
+        l2 = prefill_logits(eng2, 0, prompt)
+        np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
